@@ -1,0 +1,36 @@
+"""Shared benchmark utilities: timing, graphs, CSV rows."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+from repro.graph import erdos_renyi_graph, powerlaw_graph, rmat_graph
+
+# offline stand-ins for the paper's SNAP graphs (Table II regimes):
+#   scale-free social-network-like (OR/LJ) -> rmat
+#   low-degree web/citation (WG/CP/AM)     -> powerlaw sparse
+#   uniform control                        -> erdos-renyi
+BENCH_GRAPHS = {
+    "rmat14": lambda: rmat_graph(14, edge_factor=16, seed=7, weighted=True),
+    "pl50k": lambda: powerlaw_graph(50_000, exponent=2.1, seed=7, weighted=True),
+    "er50k": lambda: erdos_renyi_graph(50_000, avg_degree=8, seed=7, weighted=True),
+}
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds; blocks on all jax outputs."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

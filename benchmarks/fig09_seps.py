@@ -1,0 +1,48 @@
+"""Paper Fig. 9: sampling throughput in Sampled Edges Per Second (SEPS).
+
+The paper compares C-SAW vs KnightKing (biased random walk) and GraphSAINT
+(MDRW).  Offline we report SEPS of this engine across graphs and selection
+methods — ``updated`` doubles as the recompute-CTPS baseline the others are
+measured against (paper Fig. 6(b)); ``gumbel`` is the beyond-paper mode.
+Instance counts follow the paper's setup (4k walk instances / 2k sampling
+instances), scaled to CPU-feasible depth.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import BENCH_GRAPHS, row, timeit
+from repro.core import algorithms as alg
+from repro.core.engine import random_walk, traversal_sample
+
+
+def run() -> list[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for gname, build in BENCH_GRAPHS.items():
+        g = build()
+        md = min(g.max_degree(), 512)
+        # --- biased random walk (KnightKing comparison point) ---------------
+        seeds = jax.random.randint(key, (4000,), 0, g.num_vertices)
+        spec = alg.biased_random_walk()
+
+        def walk():
+            return random_walk(g, seeds, key, depth=64, spec=spec, max_degree=md)
+
+        secs = timeit(walk)
+        edges = int(walk().sampled_edges)
+        rows.append(row(f"fig09/biased_rw/{gname}", secs * 1e6, f"SEPS={edges/secs:.3e}"))
+
+        # --- MDRW (GraphSAINT comparison point) ------------------------------
+        pools = jax.random.randint(key, (512, 8), 0, g.num_vertices)
+        mspec = alg.multi_dimensional_random_walk()
+
+        def mdrw():
+            return traversal_sample(
+                g, pools, key, depth=16, spec=mspec, max_degree=md, pool_capacity=16
+            )
+
+        secs = timeit(mdrw)
+        edges = int(mdrw().num_edges.sum())
+        rows.append(row(f"fig09/mdrw/{gname}", secs * 1e6, f"SEPS={edges/secs:.3e}"))
+    return rows

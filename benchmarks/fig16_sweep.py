@@ -1,0 +1,43 @@
+"""Paper Fig. 16: NeighborSize and #instances sweeps (biased neighbor
+sampling, Depth=3)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import BENCH_GRAPHS, row, timeit
+from repro.core import algorithms as alg
+from repro.core.engine import traversal_sample
+
+
+def run() -> list[str]:
+    rows = []
+    key = jax.random.PRNGKey(3)
+    g = BENCH_GRAPHS["pl50k"]()
+    md = min(g.max_degree(), 512)
+
+    for ns in (1, 2, 4, 8):
+        spec = alg.biased_neighbor_sampling(neighbor_size=ns, frontier_size=4)
+        pools = jax.random.randint(key, (2048, 1), 0, g.num_vertices)
+
+        def go():
+            return traversal_sample(g, pools, key, depth=3, spec=spec,
+                                    max_degree=md, pool_capacity=256,
+                                    max_vertices=g.num_vertices)
+
+        secs = timeit(go)
+        edges = int(go().num_edges.sum())
+        rows.append(row(f"fig16a/NS={ns}", secs * 1e6, f"SEPS={edges/secs:.3e}"))
+
+    spec = alg.biased_neighbor_sampling(neighbor_size=8, frontier_size=4)
+    for n_inst in (2000, 4000, 8000, 16000):
+        pools = jax.random.randint(key, (n_inst, 1), 0, g.num_vertices)
+
+        def go():
+            return traversal_sample(g, pools, key, depth=3, spec=spec,
+                                    max_degree=md, pool_capacity=256,
+                                    max_vertices=g.num_vertices)
+
+        secs = timeit(go)
+        edges = int(go().num_edges.sum())
+        rows.append(row(f"fig16b/inst={n_inst}", secs * 1e6, f"SEPS={edges/secs:.3e}"))
+    return rows

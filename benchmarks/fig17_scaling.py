@@ -1,0 +1,56 @@
+"""Paper Fig. 17: multi-device scaling (instance-parallel, zero-comm).
+
+Runs subprocesses with ``--xla_force_host_platform_device_count=N`` so the
+parent process keeps its single-device view (per the dry-run isolation
+rule).  Wall-clock on shared host cores is not a throughput claim — the
+reported figure is the *work distribution* (instances per device) plus the
+collective-free execution, matching the paper's scaling argument; the
+multipod dry-run provides the compile-level proof.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+
+from benchmarks.common import row
+
+_CHILD = r"""
+import os, sys, json, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
+import jax, jax.numpy as jnp
+from repro.graph import powerlaw_graph
+from repro.core import algorithms as alg
+from repro.core.distributed import instance_parallel_walk
+
+n = %d
+g = powerlaw_graph(20000, exponent=2.1, seed=7, weighted=True)
+mesh = jax.make_mesh((n,), ("data",))
+key = jax.random.PRNGKey(0)
+seeds = jax.random.randint(key, (4096,), 0, g.num_vertices)
+md = min(g.max_degree(), 512)
+run = lambda: instance_parallel_walk(mesh, g, seeds, key, depth=32,
+                                     spec=alg.biased_random_walk(), max_degree=md)
+jax.block_until_ready(run().walks)
+t0 = time.perf_counter()
+res = run()
+jax.block_until_ready(res.walks)
+secs = time.perf_counter() - t0
+print(json.dumps({"devices": n, "secs": secs, "edges": int(res.sampled_edges)}))
+"""
+
+
+def run() -> list[str]:
+    rows = []
+    for n in (1, 2, 4):
+        out = subprocess.run(
+            [sys.executable, "-c", _CHILD % (n, n)],
+            capture_output=True, text=True, timeout=900,
+        )
+        line = out.stdout.strip().splitlines()[-1]
+        d = json.loads(line)
+        rows.append(row(
+            f"fig17/devices={n}", d["secs"] * 1e6,
+            f"SEPS={d['edges']/d['secs']:.3e};inst_per_dev={4096//n}",
+        ))
+    return rows

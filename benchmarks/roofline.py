@@ -1,0 +1,69 @@
+"""Roofline table builder: reads results/dryrun/*/*.json into the
+EXPERIMENTS.md §Roofline table (terms in seconds, dominant bottleneck,
+useful-flop ratio, fix-it note)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+FIX_NOTES = {
+    "compute_s": "raise arithmetic intensity: larger per-chip tiles / fewer remat recomputes",
+    "memory_s": "cut HBM traffic: fuse, shrink saved activations (microbatch/remat policy), bf16 collaterals",
+    "collective_s": "cut wire bytes: RS+AG instead of AR (seq-parallel TP), bf16 reduce, overlap with compute",
+}
+
+
+def load(mesh_dir: str) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(mesh_dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def table(mesh_dir: str) -> str:
+    recs = load(mesh_dir)
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "MODEL_FLOPS | useful | fits | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skip":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | — | — | {r['skip_reason'][:50]} |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | — | — | — | {r['error'][:50]} |"
+            )
+            continue
+        t = r["roofline"]
+        dom = r["dominant"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3g} | {t['memory_s']:.3g} | "
+            f"{t['collective_s']:.3g} | {dom.replace('_s','')} | {r['model_flops']:.2e} | "
+            f"{r['useful_flop_ratio']:.2f} | {'y' if r['fits_hbm'] else 'N'} | {FIX_NOTES[dom][:60]} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> list[str]:
+    rows = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        d = os.path.join("results", "dryrun", mesh)
+        if not os.path.isdir(d):
+            continue
+        ok = sum(1 for r in load(d) if r["status"] == "ok")
+        skip = sum(1 for r in load(d) if r["status"] == "skip")
+        rows.append(f"roofline/{mesh},0.0,cells_ok={ok};skipped={skip}")
+    return rows
+
+
+if __name__ == "__main__":
+    for mesh in ("pod16x16", "pod2x16x16"):
+        d = os.path.join("results", "dryrun", mesh)
+        if os.path.isdir(d):
+            print(f"\n## {mesh}\n")
+            print(table(d))

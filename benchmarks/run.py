@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see DESIGN.md §8 for the
+figure-to-module index).  ``python -m benchmarks.run [--only fig09,...]``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated module keys")
+    args = ap.parse_args()
+
+    from benchmarks import (  # noqa: PLC0415
+        fig09_seps,
+        fig10_inmem,
+        fig13_oom,
+        fig16_sweep,
+        fig17_scaling,
+        roofline,
+    )
+
+    modules = {
+        "fig09": fig09_seps,
+        "fig10": fig10_inmem,  # also emits fig11/fig12 rows
+        "fig13": fig13_oom,  # also emits fig14/fig15 columns
+        "fig16": fig16_sweep,
+        "fig17": fig17_scaling,
+        "roofline": roofline,
+    }
+    keys = args.only.split(",") if args.only else list(modules)
+    print("name,us_per_call,derived")
+    ok = True
+    for k in keys:
+        try:
+            for r in modules[k].run():
+                print(r, flush=True)
+        except Exception as e:  # noqa: BLE001
+            ok = False
+            print(f"{k},0.0,ERROR={type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

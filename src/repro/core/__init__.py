@@ -1,0 +1,50 @@
+"""C-SAW core: bias-centric sampling and random walk, TPU-native JAX.
+
+The paper's primary contribution lives here: the bias API (api.py), ITS
+selection with bipartite region search (select.py), the batched
+multi-instance engines (engine.py), the algorithm zoo (algorithms.py), the
+out-of-memory partition scheduler (oom.py), and multi-device sampling
+(distributed.py).
+"""
+from repro.core.api import (
+    EdgeCtx,
+    SamplingSpec,
+    VertexCtx,
+    degree_edge_bias,
+    degree_vertex_bias,
+    uniform_edge_bias,
+    uniform_vertex_bias,
+    weight_edge_bias,
+)
+from repro.core.select import (
+    SelectResult,
+    build_ctps,
+    its_search,
+    select_with_replacement,
+    select_without_replacement,
+    walk_transition_chunked,
+)
+from repro.core.engine import SampleResult, WalkResult, random_walk, traversal_sample
+from repro.core import algorithms
+
+__all__ = [
+    "EdgeCtx",
+    "SamplingSpec",
+    "VertexCtx",
+    "degree_edge_bias",
+    "degree_vertex_bias",
+    "uniform_edge_bias",
+    "uniform_vertex_bias",
+    "weight_edge_bias",
+    "SelectResult",
+    "build_ctps",
+    "its_search",
+    "select_with_replacement",
+    "select_without_replacement",
+    "walk_transition_chunked",
+    "SampleResult",
+    "WalkResult",
+    "random_walk",
+    "traversal_sample",
+    "algorithms",
+]

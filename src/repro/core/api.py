@@ -1,0 +1,99 @@
+"""C-SAW user programming interface (paper Fig. 2(a)).
+
+Users express a sampling / random-walk algorithm with three hooks, all
+batched (arrays carry leading instance dims) and jit-traceable:
+
+  - ``vertex_bias(VertexCtx) -> biases``  : bias of each FrontierPool candidate
+  - ``edge_bias(EdgeCtx) -> biases``      : bias of each candidate neighbor
+  - ``update(key, EdgeCtx, u) -> vertex`` : vertex to insert into the pool
+                                            (jump/restart/MH live here)
+
+Everything else — CTPS construction, ITS selection, BRS collision handling,
+frontier queues, partitioning, multi-device — is the framework's job.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class VertexCtx(NamedTuple):
+    """Context for VERTEXBIAS: candidates of a frontier pool."""
+
+    v: jax.Array  # (..., C) candidate vertex ids (-1 = empty slot)
+    deg: jax.Array  # (..., C) degrees
+    depth: jax.Array  # () current iteration
+
+
+class EdgeCtx(NamedTuple):
+    """Context for EDGEBIAS/UPDATE: edges (v -> u) out of the frontier."""
+
+    v: jax.Array  # (...,) source/frontier vertex
+    u: jax.Array  # (..., D) candidate neighbors (-1 = padding)
+    weight: jax.Array  # (..., D) edge weights
+    deg_v: jax.Array  # (...,)
+    deg_u: jax.Array  # (..., D)
+    prev: jax.Array  # (...,) vertex visited before v (-1 at start)
+    is_prev_neighbor: Optional[jax.Array]  # (..., D) bool, only if requested
+    depth: jax.Array  # ()
+
+
+BiasFn = Callable[[VertexCtx], jax.Array]
+EdgeBiasFn = Callable[[EdgeCtx], jax.Array]
+UpdateFn = Callable[[jax.Array, EdgeCtx, jax.Array], jax.Array]
+
+
+def uniform_vertex_bias(ctx: VertexCtx) -> jax.Array:
+    return jnp.ones_like(ctx.v, dtype=jnp.float32)
+
+
+def degree_vertex_bias(ctx: VertexCtx) -> jax.Array:
+    return ctx.deg.astype(jnp.float32)
+
+
+def uniform_edge_bias(ctx: EdgeCtx) -> jax.Array:
+    return jnp.ones_like(ctx.u, dtype=jnp.float32)
+
+
+def weight_edge_bias(ctx: EdgeCtx) -> jax.Array:
+    return ctx.weight.astype(jnp.float32)
+
+
+def degree_edge_bias(ctx: EdgeCtx) -> jax.Array:
+    """Biased DeepWalk: neighbor degree as bias (paper §II-A)."""
+    return ctx.deg_u.astype(jnp.float32)
+
+
+def identity_update(key: jax.Array, ctx: EdgeCtx, u: jax.Array) -> jax.Array:
+    return u
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingSpec:
+    """A sampling/random-walk algorithm as bias hooks + structural knobs.
+
+    The (frontier_size, neighbor_size, per_vertex, ...) knobs realize the
+    paper's Table I design space.
+    """
+
+    vertex_bias: BiasFn = uniform_vertex_bias
+    edge_bias: EdgeBiasFn = uniform_edge_bias
+    update: UpdateFn = identity_update
+    frontier_size: int = 1
+    neighbor_size: int = 1
+    # per-vertex pools (neighbor/forest-fire sampling) vs per-instance pooled
+    # (layer sampling, MDRW) — see paper §IV-A "Inter-warp Parallelism".
+    per_vertex: bool = True
+    # MDRW replaces the selected frontier vertex by its sampled neighbor.
+    replace_selected: bool = False
+    # sampling-without-replacement across the whole instance (traversal
+    # sampling); visited vertices get zero bias. Needs a (I, V) bitmap.
+    track_visited: bool = True
+    # node2vec needs to know whether u neighbors prev (costs a membership scan)
+    needs_prev_neighbors: bool = False
+    # forest fire: geometric NeighborSize with burning probability p_f
+    burn_prob: Optional[float] = None
+    name: str = "custom"

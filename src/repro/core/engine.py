@@ -1,0 +1,258 @@
+"""C-SAW sampling engines (paper Fig. 2(b) MAIN loop, §IV).
+
+Two drivers, both batched over thousands of concurrent instances
+(the paper's inter-warp parallelism; here: leading array dims):
+
+  - ``random_walk``       — NeighborSize=1 path-per-instance (Table I left).
+  - ``traversal_sample``  — frontier-pool sampling (neighbor / layer /
+                            forest-fire / snowball / MDRW).
+
+Both are jit-compiled, use counted RNG, fixed shapes, masked semantics, and
+the ``select`` module for all bias-based selection, so they run unchanged
+under vmap / shard_map / the partition scheduler.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import EdgeCtx, SamplingSpec, VertexCtx
+from repro.core import select as sel
+from repro.graph.csr import CSRGraph, neighbors_padded
+
+
+def _degree(graph: CSRGraph, v: jax.Array) -> jax.Array:
+    safe = jnp.maximum(v, 0)
+    return jnp.where(v >= 0, graph.indptr[safe + 1] - graph.indptr[safe], 0)
+
+
+def _edge_ctx(graph: CSRGraph, v, prev, depth, max_degree, needs_prev_neighbors):
+    safe_v = jnp.maximum(v, 0)
+    nbrs, wts, mask = neighbors_padded(graph, safe_v, max_degree)
+    nbrs = jnp.where((v >= 0)[..., None] & mask, nbrs, -1)
+    mask = nbrs >= 0
+    ipn = None
+    if needs_prev_neighbors:
+        pnbrs, _, pmask = neighbors_padded(graph, jnp.maximum(prev, 0), max_degree)
+        pnbrs = jnp.where((prev >= 0)[..., None] & pmask, pnbrs, -2)
+        # membership: u in N(prev) — O(D^2) lane-parallel compare
+        ipn = jnp.any(nbrs[..., :, None] == pnbrs[..., None, :], axis=-1) & mask
+    return (
+        EdgeCtx(
+            v=v,
+            u=nbrs,
+            weight=wts,
+            deg_v=_degree(graph, v),
+            deg_u=jnp.where(mask, _degree(graph, nbrs), 0),
+            prev=prev,
+            is_prev_neighbor=ipn,
+            depth=depth,
+        ),
+        mask,
+    )
+
+
+class WalkResult(NamedTuple):
+    walks: jax.Array  # (I, depth+1) int32, -1 after termination
+    lengths: jax.Array  # (I,) realized lengths (# vertices)
+    sampled_edges: jax.Array  # () total sampled edges (for SEPS)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "spec", "max_degree", "method"),
+)
+def random_walk(
+    graph: CSRGraph,
+    seeds: jax.Array,
+    key: jax.Array,
+    *,
+    depth: int,
+    spec: SamplingSpec,
+    max_degree: int,
+    method: str = "its_brs",
+) -> WalkResult:
+    """Run one random-walk step per scan iteration for all instances."""
+    num_inst = seeds.shape[0]
+
+    def step(carry, it):
+        cur, prev = carry
+        kstep = jax.random.fold_in(key, it)
+        ctx, mask = _edge_ctx(graph, cur, prev, it, max_degree, spec.needs_prev_neighbors)
+        biases = jnp.where(mask, spec.edge_bias(ctx), 0.0)
+        idx = sel.select_with_replacement(jax.random.fold_in(kstep, 1), biases, mask, 1)[..., 0]
+        u = jnp.take_along_axis(ctx.u, idx[..., None], axis=-1)[..., 0]
+        alive = (cur >= 0) & jnp.any(mask, axis=-1)
+        u = jnp.where(alive, u, -1)
+        nxt = spec.update(jax.random.fold_in(kstep, 2), ctx, u)
+        nxt = jnp.where(alive, nxt, -1)
+        return (nxt, cur), nxt
+
+    (_, _), path = jax.lax.scan(step, (seeds.astype(jnp.int32), jnp.full((num_inst,), -1, jnp.int32)), jnp.arange(depth))
+    walks = jnp.concatenate([seeds[None].astype(jnp.int32), path], axis=0).T  # (I, depth+1)
+    lengths = jnp.sum(walks >= 0, axis=-1)
+    return WalkResult(walks, lengths, jnp.sum(jnp.maximum(lengths - 1, 0)))
+
+
+class SampleResult(NamedTuple):
+    edges_src: jax.Array  # (I, cap) int32 sampled edge sources (-1 pad)
+    edges_dst: jax.Array  # (I, cap) int32 sampled edge dests
+    num_edges: jax.Array  # (I,) per-instance sampled edge count
+    frontier_pool: jax.Array  # (I, C) final pool
+    iters: jax.Array  # () total selection retry iterations (Fig. 11)
+    searches: jax.Array  # () total CTPS searches (Fig. 12)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "spec", "max_degree", "pool_capacity", "method", "max_vertices"),
+)
+def traversal_sample(
+    graph: CSRGraph,
+    seed_pools: jax.Array,  # (I, S) initial pools, -1 padded
+    key: jax.Array,
+    *,
+    depth: int,
+    spec: SamplingSpec,
+    max_degree: int,
+    pool_capacity: int,
+    method: str = "its_brs",
+    max_vertices: int = 0,  # >0 enables visited bitmap of that many vertices
+) -> SampleResult:
+    """Paper Fig. 2(b) MAIN: iterate SELECT-frontier / GATHER / SELECT-neighbors / UPDATE."""
+    num_inst, _ = seed_pools.shape
+    fs, ns = spec.frontier_size, spec.neighbor_size
+    edges_per_iter = fs * ns if spec.per_vertex else ns
+    cap = depth * edges_per_iter
+
+    pool = jnp.full((num_inst, pool_capacity), -1, jnp.int32)
+    pool = pool.at[:, : seed_pools.shape[1]].set(seed_pools.astype(jnp.int32))
+    visited = None
+    if spec.track_visited and max_vertices > 0:
+        visited = jnp.zeros((num_inst, max_vertices), bool)
+        seed_oh = jax.nn.one_hot(jnp.maximum(seed_pools, 0), max_vertices, dtype=bool)
+        visited = visited | jnp.any(seed_oh & (seed_pools >= 0)[..., None], axis=1)
+
+    esrc = jnp.full((num_inst, cap), -1, jnp.int32)
+    edst = jnp.full((num_inst, cap), -1, jnp.int32)
+    ecnt = jnp.zeros((num_inst,), jnp.int32)
+    tot_iters = jnp.zeros((), jnp.int32)
+    tot_searches = jnp.zeros((), jnp.int32)
+
+    for it in range(depth):
+        kit = jax.random.fold_in(key, it)
+        # ---- SELECT frontier from pool (line 4) --------------------------
+        pmask = pool >= 0
+        vctx = VertexCtx(v=pool, deg=jnp.where(pmask, _degree(graph, pool), 0), depth=it)
+        vbias = jnp.where(pmask, spec.vertex_bias(vctx), 0.0)
+        fres = sel.select_without_replacement(jax.random.fold_in(kit, 0), vbias, pmask, fs, method=method)
+        frontier = jnp.where(
+            fres.valid, jnp.take_along_axis(pool, jnp.maximum(fres.indices, 0), axis=-1), -1
+        )  # (I, fs)
+        tot_iters = tot_iters + jnp.sum(fres.iters)
+        tot_searches = tot_searches + jnp.sum(fres.searches)
+
+        # ---- GATHER + EDGEBIAS (lines 5-6) ------------------------------
+        ctx, emask = _edge_ctx(graph, frontier, jnp.full_like(frontier, -1), it, max_degree, spec.needs_prev_neighbors)
+        ebias = jnp.where(emask, spec.edge_bias(ctx), 0.0)
+        if visited is not None:
+            seen = jnp.take_along_axis(
+                visited[:, None, :], jnp.maximum(ctx.u, 0), axis=-1
+            ) & (ctx.u >= 0)
+            ebias = jnp.where(seen, 0.0, ebias)
+            emask = emask & ~seen
+
+        if spec.per_vertex:
+            # independent NeighborPool per frontier vertex (neighbor sampling)
+            nres = sel.select_without_replacement(jax.random.fold_in(kit, 1), ebias, emask, ns, method=method)
+            src = jnp.broadcast_to(frontier[..., None], frontier.shape + (ns,))
+            dst = jnp.where(
+                nres.valid, jnp.take_along_axis(ctx.u, jnp.maximum(nres.indices, 0), axis=-1), -1
+            )
+            if spec.burn_prob is not None:
+                # forest fire: keep a geometric(p_f) prefix of the ns draws
+                g = jax.random.uniform(jax.random.fold_in(kit, 7), dst.shape)
+                keep = jnp.cumprod((g < spec.burn_prob).astype(jnp.int32), axis=-1) > 0
+                keep = keep | (jnp.arange(ns) == 0)  # burn at least one
+                dst = jnp.where(keep, dst, -1)
+            src, dst = src.reshape(num_inst, -1), dst.reshape(num_inst, -1)
+            if spec.track_visited:
+                # sampling-without-replacement across the whole instance:
+                # two frontier vertices may draw the same neighbor in the
+                # same round (separate NeighborPools) — keep the first.
+                eq = dst[..., :, None] == dst[..., None, :]
+                both = (dst >= 0)[..., :, None] & (dst >= 0)[..., None, :]
+                k_flat = dst.shape[-1]
+                tri = jnp.tril(jnp.ones((k_flat, k_flat), bool), -1)
+                dup = jnp.any(eq & both & tri, axis=-1)
+                dst = jnp.where(dup, -1, dst)
+            valid = dst >= 0
+            tot_iters = tot_iters + jnp.sum(nres.iters)
+            tot_searches = tot_searches + jnp.sum(nres.searches)
+        else:
+            # pooled NeighborPool over all frontier vertices (layer / MDRW)
+            flat_bias = ebias.reshape(num_inst, -1)
+            flat_mask = emask.reshape(num_inst, -1)
+            flat_u = ctx.u.reshape(num_inst, -1)
+            flat_v = jnp.broadcast_to(frontier[..., None], ctx.u.shape).reshape(num_inst, -1)
+            nres = sel.select_without_replacement(jax.random.fold_in(kit, 1), flat_bias, flat_mask, ns, method=method)
+            gi = jnp.maximum(nres.indices, 0)
+            src = jnp.where(nres.valid, jnp.take_along_axis(flat_v, gi, axis=-1), -1)
+            dst = jnp.where(nres.valid, jnp.take_along_axis(flat_u, gi, axis=-1), -1)
+            valid = dst >= 0
+            tot_iters = tot_iters + jnp.sum(nres.iters)
+            tot_searches = tot_searches + jnp.sum(nres.searches)
+
+        # ---- record sampled edges (line 8) -------------------------------
+        k = src.shape[-1]
+        esrc = jax.lax.dynamic_update_slice(esrc, src, (0, it * edges_per_iter))
+        edst = jax.lax.dynamic_update_slice(edst, dst, (0, it * edges_per_iter))
+        ecnt = ecnt + jnp.sum(valid, axis=-1, dtype=jnp.int32)
+
+        # ---- UPDATE pool (line 7) ----------------------------------------
+        ectx_flat = EdgeCtx(
+            v=src, u=dst, weight=jnp.ones_like(dst, jnp.float32),
+            deg_v=jnp.where(src >= 0, _degree(graph, src), 0),
+            deg_u=jnp.where(dst >= 0, _degree(graph, dst), 0),
+            prev=jnp.full((num_inst,), -1, jnp.int32), is_prev_neighbor=None, depth=it,
+        )
+        new_v = spec.update(jax.random.fold_in(kit, 2), ectx_flat, dst)
+        new_v = jnp.where(valid, new_v, -1)
+        if visited is not None:
+            oh = jax.nn.one_hot(jnp.maximum(new_v, 0), max_vertices, dtype=bool)
+            visited = visited | jnp.any(oh & (new_v >= 0)[..., None], axis=1)
+        if spec.replace_selected:
+            # MDRW: drop selected frontier vertices from the pool, insert new.
+            drop = jnp.any(pool[..., :, None] == jnp.where(frontier >= 0, frontier, -2)[..., None, :], axis=-1)
+            pool = jnp.where(drop, -1, pool)
+            pool = _insert_into_pool(pool, new_v)
+        elif spec.per_vertex:
+            # BFS-style: next pool is exactly the newly sampled layer.
+            pool = jnp.full_like(pool, -1)
+            pool = _insert_into_pool(pool, new_v)
+        else:
+            pool = _insert_into_pool(pool, new_v)
+
+    return SampleResult(esrc, edst, ecnt, pool, tot_iters, tot_searches)
+
+
+def _insert_into_pool(pool: jax.Array, new_v: jax.Array) -> jax.Array:
+    """Insert new vertices into -1 slots (left-compacting both sides)."""
+    cap = pool.shape[-1]
+    # compact existing pool entries to the left
+    order = jnp.argsort(jnp.where(pool >= 0, 0, 1), axis=-1, stable=True)
+    pool = jnp.take_along_axis(pool, order, axis=-1)
+    nvalid = jnp.sum(pool >= 0, axis=-1)
+    # compact new vertices
+    norder = jnp.argsort(jnp.where(new_v >= 0, 0, 1), axis=-1, stable=True)
+    new_v = jnp.take_along_axis(new_v, norder, axis=-1)
+    # scatter new entries at offset nvalid
+    k = new_v.shape[-1]
+    pos = nvalid[..., None] + jnp.arange(k)
+    ok = (new_v >= 0) & (pos < cap)
+    onehot = (pos[..., None] == jnp.arange(cap)) & ok[..., None]
+    placed = jnp.max(jnp.where(onehot, new_v[..., None], -1), axis=-2)
+    return jnp.where(placed >= 0, placed, pool)

@@ -1,0 +1,250 @@
+"""Out-of-memory sampling: workload-aware partition scheduling (paper §V).
+
+The graph lives on the host in contiguous vertex-range partitions; only a
+bounded number of partitions is resident in device memory at a time.  The
+scheduler:
+
+  1. counts *active* frontier vertices per partition (paper Fig. 8 step 1),
+  2. transfers the partitions with the most workload first (step 2) through a
+     double-buffered ``TransferEngine`` (the cudaMemcpyAsync analogue),
+  3. samples a resident partition until its frontier queue drains, inserting
+     successors into the owning partition's queue (cross-partition comm),
+  4. repeats until no partition has active vertices (step 3).
+
+Batched multi-instance sampling (§V-C) merges entries of *all* instances into
+one queue per partition (metadata: InstanceID, CurrDepth); disabling it
+processes instances one at a time — the paper's Fig. 13 baseline.
+
+Thread-block workload balancing (§V-B) becomes proportional chunk scheduling
+across co-resident partitions; per-"kernel" processed-entry counts are
+recorded so benchmarks can report the paper's Fig. 14 imbalance metric.
+
+This is a host-driven loop by necessity (the paper's is too — the CPU decides
+which partition to ship).  Device compute is jit-compiled per partition with
+fixed-size padded entry chunks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import SamplingSpec
+from repro.core import select as sel
+from repro.core.engine import _edge_ctx
+from repro.graph.csr import CSRGraph
+from repro.graph.partition import RangePartition, partition_of
+
+
+@dataclasses.dataclass
+class OOMStats:
+    """Counters mirrored from the paper's out-of-memory evaluation."""
+
+    partition_transfers: int = 0
+    bytes_transferred: int = 0
+    kernel_launches: int = 0
+    entries_per_kernel: Optional[List[int]] = None
+    sampled_edges: int = 0
+
+    def __post_init__(self):
+        if self.entries_per_kernel is None:
+            self.entries_per_kernel = []
+
+    def kernel_time_std(self) -> float:
+        """Std of per-kernel workload (entry counts) — Fig. 14 proxy."""
+        if not self.entries_per_kernel:
+            return 0.0
+        return float(np.std(np.asarray(self.entries_per_kernel, dtype=np.float64)))
+
+
+class TransferEngine:
+    """Double-buffered host->device partition transfers with an LRU of
+    ``capacity`` resident partitions (the 'GPU memory holds k partitions'
+    constraint in the paper's Fig. 8 walkthrough)."""
+
+    def __init__(self, partitions: List[RangePartition], total_vertices: int, capacity: int):
+        self.partitions = partitions
+        self.total_vertices = total_vertices
+        self.capacity = capacity
+        self._resident: dict[int, CSRGraph] = {}
+        self._lru: list[int] = []
+        self.stats_transfers = 0
+        self.stats_bytes = 0
+
+    def fetch(self, pid: int) -> CSRGraph:
+        if pid in self._resident:
+            self._lru.remove(pid)
+            self._lru.append(pid)
+            return self._resident[pid]
+        if len(self._resident) >= self.capacity:
+            evict = self._lru.pop(0)
+            del self._resident[evict]
+        part = self.partitions[pid]
+        dev = part.to_device_csr(self.total_vertices)  # the DMA
+        self.stats_transfers += 1
+        self.stats_bytes += part.nbytes()
+        self._resident[pid] = dev
+        self._lru.append(pid)
+        return dev
+
+
+@functools.partial(jax.jit, static_argnames=("max_degree", "spec"))
+def _walk_step_kernel(graph: CSRGraph, cur, prev, key, *, max_degree: int, spec: SamplingSpec):
+    """One walk step for a padded chunk of queue entries (cur < 0 = padding)."""
+    ctx, mask = _edge_ctx(graph, cur, prev, jnp.zeros((), jnp.int32), max_degree, spec.needs_prev_neighbors)
+    biases = jnp.where(mask, spec.edge_bias(ctx), 0.0)
+    idx = sel.select_with_replacement(key, biases, mask, 1)[..., 0]
+    u = jnp.take_along_axis(ctx.u, idx[..., None], axis=-1)[..., 0]
+    alive = (cur >= 0) & jnp.any(mask, axis=-1)
+    u = jnp.where(alive, u, -1)
+    return spec.update(jax.random.fold_in(key, 7), ctx, u)
+
+
+@functools.partial(jax.jit, static_argnames=("max_degree", "spec", "method"))
+def _neighbor_step_kernel(graph: CSRGraph, cur, key, *, max_degree: int, spec: SamplingSpec, method: str):
+    """NeighborSize successors per entry, without replacement."""
+    prev = jnp.full_like(cur, -1)
+    ctx, mask = _edge_ctx(graph, cur, prev, jnp.zeros((), jnp.int32), max_degree, False)
+    biases = jnp.where(mask, spec.edge_bias(ctx), 0.0)
+    res = sel.select_without_replacement(key, biases, mask, spec.neighbor_size, method=method)
+    u = jnp.where(res.valid, jnp.take_along_axis(ctx.u, jnp.maximum(res.indices, 0), axis=-1), -1)
+    return jnp.where((cur >= 0)[..., None], u, -1)
+
+
+class _Queue:
+    """Per-partition frontier queue: (vertex, instance, depth, prev) arrays."""
+
+    def __init__(self):
+        self.vertex: list[int] = []
+        self.instance: list[int] = []
+        self.depth: list[int] = []
+        self.prev: list[int] = []
+
+    def push(self, v, inst, d, prev):
+        self.vertex.append(int(v))
+        self.instance.append(int(inst))
+        self.depth.append(int(d))
+        self.prev.append(int(prev))
+
+    def push_many(self, v, inst, d, prev):
+        self.vertex.extend(int(x) for x in v)
+        self.instance.extend(int(x) for x in inst)
+        self.depth.extend(int(x) for x in d)
+        self.prev.extend(int(x) for x in prev)
+
+    def pop_chunk(self, n: int):
+        n = min(n, len(self.vertex))
+        out = (
+            np.array(self.vertex[:n], np.int32),
+            np.array(self.instance[:n], np.int32),
+            np.array(self.depth[:n], np.int32),
+            np.array(self.prev[:n], np.int32),
+        )
+        del self.vertex[:n], self.instance[:n], self.depth[:n], self.prev[:n]
+        return out
+
+    def __len__(self):
+        return len(self.vertex)
+
+
+def oom_random_walk(
+    partitions: List[RangePartition],
+    total_vertices: int,
+    seeds: np.ndarray,
+    key: jax.Array,
+    *,
+    depth: int,
+    spec: SamplingSpec,
+    max_degree: int,
+    memory_capacity: int = 2,
+    num_streams: int = 2,
+    chunk: int = 1024,
+    batched: bool = True,
+    workload_aware: bool = True,
+    balance: bool = True,
+) -> tuple[np.ndarray, OOMStats]:
+    """Out-of-memory random walk over host-resident partitions.
+
+    Returns (walks (I, depth+1), stats).  Flags map to the paper's ablations:
+    ``batched`` = §V-C, ``workload_aware`` = §V-B scheduling, ``balance`` =
+    thread-block workload balancing (proportional chunk sizing).
+    """
+    num_parts = len(partitions)
+    num_inst = len(seeds)
+    walks = np.full((num_inst, depth + 1), -1, np.int32)
+    walks[:, 0] = seeds
+    queues = [_Queue() for _ in range(num_parts)]
+    pids = partition_of(seeds, total_vertices, num_parts)
+    for i, (s, p) in enumerate(zip(seeds, pids)):
+        queues[p].push(s, i, 0, -1)
+
+    engine = TransferEngine(partitions, total_vertices, memory_capacity)
+    stats = OOMStats()
+    kcounter = 0
+
+    def drain(pid: int, graph: CSRGraph, budget: int) -> int:
+        """Process up to ``budget`` entries of queue[pid]; return processed."""
+        nonlocal kcounter
+        q = queues[pid]
+        processed = 0
+        while len(q) and processed < budget:
+            take = min(chunk, budget - processed, len(q))
+            if not batched:
+                # paper Fig.13 baseline: one instance at a time
+                inst0 = q.instance[0]
+                take = 1
+                while take < min(chunk, len(q)) and q.instance[take] == inst0:
+                    take += 1
+            v, inst, d, prev = q.pop_chunk(take)
+            pad = chunk - len(v)
+            vp = np.pad(v, (0, pad), constant_values=-1)
+            pp = np.pad(prev, (0, pad), constant_values=-1)
+            kcounter += 1
+            kkey = jax.random.fold_in(key, kcounter)
+            nxt = np.asarray(
+                _walk_step_kernel(graph, jnp.asarray(vp), jnp.asarray(pp), kkey,
+                                  max_degree=max_degree, spec=spec)
+            )[: len(v)]
+            stats.kernel_launches += 1
+            stats.entries_per_kernel.append(len(v))
+            alive = nxt >= 0
+            walks[inst[alive], d[alive] + 1] = nxt[alive]
+            stats.sampled_edges += int(alive.sum())
+            cont = alive & (d + 1 < depth)
+            if cont.any():
+                npid = partition_of(nxt[cont], total_vertices, num_parts)
+                for tp in np.unique(npid):
+                    m = npid == tp
+                    queues[tp].push_many(nxt[cont][m], inst[cont][m], d[cont][m] + 1, v[cont][m])
+            processed += len(v)
+        return processed
+
+    while True:
+        counts = np.array([len(q) for q in queues])
+        if counts.sum() == 0:
+            break
+        if workload_aware:
+            order = np.argsort(-counts)
+        else:
+            order = np.arange(num_parts)  # fixed round-robin baseline
+        active = [int(p) for p in order if counts[p] > 0][:num_streams]
+        total_active = counts[active].sum()
+        for pid in active:
+            graph = engine.fetch(pid)
+            if balance:
+                budget = max(chunk, int(np.ceil(counts[pid] / max(total_active, 1) * num_streams * chunk)))
+            else:
+                budget = chunk * num_streams
+            # paper: sample the partition until its queue has no active vertices
+            while len(queues[pid]):
+                drain(pid, graph, budget)
+                if not workload_aware:
+                    break  # baseline releases the partition after one pass
+
+    stats.partition_transfers = engine.stats_transfers
+    stats.bytes_transferred = engine.stats_bytes
+    return walks, stats

@@ -1,0 +1,293 @@
+"""Bias-based vertex selection (paper §II-B, §IV).
+
+This module is the heart of C-SAW: turning per-candidate *biases* into
+selections via Inverse Transform Sampling (ITS) over the Cumulative
+Transition Probability Space (CTPS), with *bipartite region search* (BRS,
+paper §IV-B, Theorem 2) to mitigate selection collisions when sampling
+without replacement.
+
+All functions are batched over arbitrary leading instance dimensions and are
+jit/vmap/shard_map friendly (fixed shapes, masked semantics, counted RNG).
+
+Selection modes (``SelectMethod``):
+  - ``its_brs``   — paper-faithful: ITS + bipartite region search retry.
+  - ``repeated``  — naive baseline (paper Fig. 6(a)): fresh re-draw on collision.
+  - ``updated``   — recompute the CTPS excluding selected (paper Fig. 6(b)).
+  - ``gumbel``    — beyond-paper TPU-native: Gumbel top-k (Plackett-Luce);
+                    distributionally identical to sequential without-replacement
+                    ITS, collision-free by construction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+SelectMethod = Literal["its_brs", "repeated", "updated", "gumbel"]
+
+_EPS = 1e-12
+
+
+def build_ctps(biases: jax.Array, mask: jax.Array | None = None) -> jax.Array:
+    """Inclusive normalized prefix sum of biases: the CTPS (paper Eq. 1).
+
+    Region of candidate ``j`` is ``[ctps[j-1], ctps[j])`` with ``ctps[-1]=0``.
+    Masked/zero-bias candidates get zero-width regions (unselectable).
+    """
+    if mask is not None:
+        biases = jnp.where(mask, biases, 0.0)
+    biases = jnp.maximum(biases.astype(jnp.float32), 0.0)
+    sums = jnp.cumsum(biases, axis=-1)
+    total = sums[..., -1:]
+    return sums / jnp.maximum(total, _EPS)
+
+
+def its_search(ctps: jax.Array, r: jax.Array) -> jax.Array:
+    """Locate the CTPS region containing ``r`` (vectorized 'binary search').
+
+    On TPU a lane-parallel compare-count beats a serial binary search for
+    pool sizes up to a few thousand; this is also exactly what the Pallas
+    kernel does.  ``r`` has shape ``ctps.shape[:-1] + (k,)``.
+    """
+    # count of regions with upper boundary <= r  ==  index of containing region
+    idx = jnp.sum(ctps[..., None, :] <= r[..., :, None], axis=-1)
+    return jnp.clip(idx, 0, ctps.shape[-1] - 1).astype(jnp.int32)
+
+
+def select_with_replacement(
+    key: jax.Array, biases: jax.Array, mask: jax.Array | None, k: int
+) -> jax.Array:
+    """ITS selection *with* replacement (random-walk case, paper Table I)."""
+    ctps = build_ctps(biases, mask)
+    r = jax.random.uniform(key, ctps.shape[:-1] + (k,), dtype=jnp.float32)
+    return its_search(ctps, r)
+
+
+class SelectResult(NamedTuple):
+    indices: jax.Array  # (..., k) int32, -1 where selection failed/invalid
+    valid: jax.Array  # (..., k) bool
+    iters: jax.Array  # (...,) int32 — retry-loop trip count (paper Fig. 11)
+    searches: jax.Array  # (...,) int32 — total CTPS searches (paper Fig. 12)
+
+
+def _dedup_priority(cand: jax.Array, active: jax.Array) -> jax.Array:
+    """Within-round conflict resolution: lowest-lane duplicate wins.
+
+    TPU adaptation of the paper's atomic bitmap (DESIGN.md §2): a K×K
+    equality matrix + lower-triangular priority replaces atomicCAS.
+    Returns a boolean 'winner' mask over the k draws.
+    """
+    k = cand.shape[-1]
+    eq = cand[..., :, None] == cand[..., None, :]  # (..., k, k)
+    both = active[..., :, None] & active[..., None, :]
+    lower = jnp.tril(jnp.ones((k, k), dtype=bool), k=-1)
+    beaten = jnp.any(eq & both & lower, axis=-1)  # an earlier lane took it
+    return active & ~beaten
+
+
+def select_without_replacement(
+    key: jax.Array,
+    biases: jax.Array,
+    mask: jax.Array | None,
+    k: int,
+    method: SelectMethod = "its_brs",
+    max_iters: int = 32,
+) -> SelectResult:
+    """Select ``k`` distinct candidates with probability proportional to bias.
+
+    biases: (..., P); mask: (..., P) bool or None; returns indices (..., k).
+    If fewer than k candidates are selectable the tail is marked invalid.
+    """
+    if method == "gumbel":
+        return _select_gumbel(key, biases, mask, k)
+    if method == "updated":
+        return _select_updated(key, biases, mask, k)
+    return _select_its_loop(key, biases, mask, k, use_brs=(method == "its_brs"), max_iters=max_iters)
+
+
+def _select_gumbel(key, biases, mask, k) -> SelectResult:
+    b = jnp.maximum(biases.astype(jnp.float32), 0.0)
+    if mask is not None:
+        b = jnp.where(mask, b, 0.0)
+    logits = jnp.log(jnp.maximum(b, _EPS))
+    logits = jnp.where(b > 0, logits, -jnp.inf)
+    g = jax.random.gumbel(key, b.shape, dtype=jnp.float32)
+    keys_ = jnp.where(jnp.isfinite(logits), logits + g, -jnp.inf)
+    _, idx = jax.lax.top_k(keys_, k)
+    navail = jnp.sum((b > 0), axis=-1)
+    valid = jnp.arange(k) < navail[..., None]
+    idx = jnp.where(valid, idx, -1).astype(jnp.int32)
+    zeros = jnp.zeros(b.shape[:-1], dtype=jnp.int32)
+    return SelectResult(idx, valid, zeros + 1, zeros + k)
+
+
+def _select_updated(key, biases, mask, k) -> SelectResult:
+    """Paper Fig. 6(b): recompute CTPS after every selection (oracle baseline)."""
+    b = jnp.maximum(biases.astype(jnp.float32), 0.0)
+    if mask is not None:
+        b = jnp.where(mask, b, 0.0)
+    batch_shape = b.shape[:-1]
+
+    def body(i, carry):
+        b_cur, out, valid = carry
+        ctps = build_ctps(b_cur)
+        r = jax.random.uniform(jax.random.fold_in(key, i), batch_shape + (1,))
+        idx = its_search(ctps, r)[..., 0]
+        ok = jnp.take_along_axis(b_cur, idx[..., None], axis=-1)[..., 0] > 0
+        out = out.at[..., i].set(jnp.where(ok, idx, -1))
+        valid = valid.at[..., i].set(ok)
+        b_cur = b_cur * (1.0 - jax.nn.one_hot(idx, b.shape[-1], dtype=b.dtype))
+        return b_cur, out, valid
+
+    out = jnp.full(batch_shape + (k,), -1, dtype=jnp.int32)
+    valid = jnp.zeros(batch_shape + (k,), dtype=bool)
+    _, out, valid = jax.lax.fori_loop(0, k, body, (b, out, valid))
+    zeros = jnp.zeros(batch_shape, dtype=jnp.int32)
+    return SelectResult(out, valid, zeros + k, zeros + k)
+
+
+def _select_its_loop(key, biases, mask, k, *, use_brs: bool, max_iters: int) -> SelectResult:
+    """ITS without replacement with the paper's retry loop (Fig. 5 lines 9-14).
+
+    Each round, every unfinished draw gets a fresh uniform r'; draws that hit
+    an already-selected region either (a) re-draw next round (``repeated``) or
+    (b) apply one bipartite-region-search adjustment within the round
+    (``its_brs``, paper steps 1-5) and only fall back to a fresh random if the
+    adjusted r *also* lands on a selected region ("go to 1").
+    """
+    b = jnp.maximum(biases.astype(jnp.float32), 0.0)
+    if mask is not None:
+        b = jnp.where(mask, b, 0.0)
+    batch_shape = b.shape[:-1]
+    p = b.shape[-1]
+    ctps = build_ctps(b)
+    lower = jnp.concatenate([jnp.zeros_like(ctps[..., :1]), ctps[..., :-1]], axis=-1)
+    navail = jnp.sum(b > 0, axis=-1)
+    want = jnp.minimum(navail, k)  # can't select more than available
+
+    def sel_at(selmask, idx):
+        return jnp.take_along_axis(selmask, idx, axis=-1)
+
+    def cond(carry):
+        it, done, _, _, _, _ = carry
+        return jnp.logical_and(it < max_iters, jnp.any(~done))
+
+    def body(carry):
+        it, done, out, selmask, iters, searches = carry
+        rkey = jax.random.fold_in(key, it)
+        r1 = jax.random.uniform(rkey, batch_shape + (k,), dtype=jnp.float32)
+        pending = ~done
+        idx1 = its_search(ctps, r1)
+        hit1 = sel_at(selmask, idx1)  # collided with previously-selected
+        searches = searches + jnp.sum(pending, axis=-1)
+        if use_brs:
+            # Bipartite region search (paper §IV-B): transform r, reuse CTPS.
+            l = jnp.take_along_axis(lower, idx1, axis=-1)
+            h = jnp.take_along_axis(ctps, idx1, axis=-1)
+            delta = h - l
+            r2 = r1 * (1.0 - delta)
+            r2 = jnp.where(r2 < l, r2, r2 + delta)
+            r2 = jnp.clip(r2, 0.0, 1.0 - _EPS)
+            idx2 = its_search(ctps, r2)
+            hit2 = sel_at(selmask, idx2)
+            searches = searches + jnp.sum(pending & hit1, axis=-1)
+            cand = jnp.where(hit1, idx2, idx1)
+            ok = pending & ~jnp.where(hit1, hit2, hit1)
+        else:
+            cand = idx1
+            ok = pending & ~hit1
+        # candidate must carry probability mass
+        ok = ok & (jnp.take_along_axis(b, cand, axis=-1) > 0)
+        # within-round dedup: lowest lane wins (DESIGN.md conflict matrix)
+        win = _dedup_priority(cand, ok)
+        # rank of each newly finished draw -> stable output order
+        out = jnp.where(win, cand, out)
+        onehot = jax.nn.one_hot(jnp.where(win, cand, 0), p, dtype=bool) & win[..., None]
+        selmask = selmask | jnp.any(onehot, axis=-2)
+        done_new = done | win
+        # stop instances that already have `want` selections
+        got = jnp.sum(done_new, axis=-1)
+        exhausted = got >= want
+        done_new = done_new | (exhausted[..., None] & (jnp.arange(k) >= want[..., None]))
+        iters = iters + jnp.any(~done, axis=-1).astype(jnp.int32)
+        return it + 1, done_new, out, selmask, iters, searches
+
+    init = (
+        jnp.zeros((), jnp.int32),
+        jnp.arange(k) >= want[..., None],  # draws beyond availability are done/invalid
+        jnp.full(batch_shape + (k,), -1, jnp.int32),
+        jnp.zeros(batch_shape + (p,), bool),
+        jnp.zeros(batch_shape, jnp.int32),
+        jnp.zeros(batch_shape, jnp.int32),
+    )
+    _, done, out, selmask, iters, searches = jax.lax.while_loop(cond, body, init)
+    valid = out >= 0
+    return SelectResult(out, valid, iters, searches)
+
+
+# ---------------------------------------------------------------------------
+# Chunked ITS for unbounded-degree rows (no padding): two-pass scan.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def walk_transition_chunked(
+    key: jax.Array,
+    indptr: jax.Array,
+    weights: jax.Array,
+    cur: jax.Array,
+    chunk: int = 512,
+) -> jax.Array:
+    """One weighted ITS draw per walker over arbitrarily large neighbor rows.
+
+    Two-pass chunked scan (DESIGN.md §2): pass 1 accumulates the row total,
+    pass 2 locates the chunk+offset where the cumulative bias crosses
+    ``r * total``.  Returns the *edge offset* within each row (int32), or -1
+    for dead ends.  O(max_deg/chunk) steps, fixed memory.
+    """
+    start = indptr[cur]
+    deg = indptr[cur + 1] - start
+    nchunks = (jnp.max(deg) + chunk - 1) // chunk  # dynamic upper bound is fine under scan-with-cond
+    nchunks = jnp.maximum(nchunks, 1)
+
+    def chunk_sum(c, carry):
+        tot = carry
+        offs = c * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        m = offs < deg[..., None]
+        w = jnp.where(m, weights[jnp.where(m, start[..., None] + offs, 0)], 0.0)
+        return tot + jnp.sum(w, axis=-1)
+
+    max_iters = (weights.shape[0] + chunk - 1) // chunk
+
+    def p1_body(c, tot):
+        return jax.lax.cond(c < nchunks, lambda t: chunk_sum(c, t), lambda t: t, tot)
+
+    total = jax.lax.fori_loop(0, max_iters, p1_body, jnp.zeros(cur.shape, jnp.float32))
+    r = jax.random.uniform(key, cur.shape, dtype=jnp.float32)
+    target = r * total
+
+    def p2_body(c, carry):
+        cum, found = carry
+
+        def step(args):
+            cum, found = args
+            offs = c * chunk + jnp.arange(chunk, dtype=jnp.int32)
+            m = offs < deg[..., None]
+            w = jnp.where(m, weights[jnp.where(m, start[..., None] + offs, 0)], 0.0)
+            cw = jnp.cumsum(w, axis=-1) + cum[..., None]
+            hit = (cw > target[..., None]) & m & (found[..., None] < 0)
+            any_hit = jnp.any(hit, axis=-1)
+            first = jnp.argmax(hit, axis=-1) + c * chunk
+            found = jnp.where((found < 0) & any_hit, first, found)
+            return cw[..., -1], found
+
+        return jax.lax.cond(c < nchunks, step, lambda a: a, (cum, found))
+
+    cum0 = jnp.zeros(cur.shape, jnp.float32)
+    found0 = jnp.full(cur.shape, -1, jnp.int32)
+    _, found = jax.lax.fori_loop(0, max_iters, p2_body, (cum0, found0))
+    # numerical edge: r*total == total -> take last valid edge
+    found = jnp.where((found < 0) & (deg > 0) & (total > 0), deg - 1, found)
+    return jnp.where((deg > 0) & (total > 0), found, -1)

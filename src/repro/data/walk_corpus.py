@@ -1,0 +1,53 @@
+"""Walk corpus: the C-SAW engine as the LM data plane (DESIGN.md §4).
+
+DeepWalk/node2vec walks over a graph become token sequences for any of the
+assigned decoder architectures (vertex id = token id).  This is the honest
+integration of the paper's contribution with the LM substrate: the sampler
+feeds the trainer, exactly like DeepWalk feeds skip-gram — generalized to
+modern decoders.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import algorithms as alg
+from repro.core.engine import random_walk
+from repro.graph.csr import CSRGraph
+
+
+def build_walk_corpus(
+    graph: CSRGraph,
+    *,
+    num_walks: int,
+    walk_length: int,
+    algorithm: str = "deepwalk",
+    seed: int = 0,
+    max_degree: int | None = None,
+    vocab_size: int | None = None,
+    **algo_kwargs,
+) -> np.ndarray:
+    """Generate (num_walks, walk_length+1) token sequences via C-SAW.
+
+    Dead-end walks are padded by repeating the last vertex (decoders need
+    dense rows); vocab_size asserts vertex ids fit the LM embedding.
+    """
+    spec = alg.ALGORITHMS[algorithm](**algo_kwargs)
+    key = jax.random.PRNGKey(seed)
+    seeds = jax.random.randint(
+        jax.random.fold_in(key, 1), (num_walks,), 0, graph.num_vertices
+    )
+    md = max_degree or graph.max_degree()
+    res = random_walk(graph, seeds, key, depth=walk_length, spec=spec, max_degree=md)
+    walks = np.asarray(res.walks)
+    # pad dead ends with the last valid vertex
+    for row in walks:
+        last = row[0]
+        for j in range(row.shape[0]):
+            if row[j] < 0:
+                row[j] = last
+            else:
+                last = row[j]
+    if vocab_size is not None:
+        assert walks.max() < vocab_size, "graph vertices exceed LM vocab"
+    return walks.astype(np.int32)

@@ -1,0 +1,16 @@
+"""Graph substrate: CSR storage, generators, partitioning."""
+from repro.graph.csr import CSRGraph, csr_from_edges, degrees, neighbors_padded
+from repro.graph.generators import rmat_graph, erdos_renyi_graph, powerlaw_graph
+from repro.graph.partition import RangePartition, partition_by_vertex_range
+
+__all__ = [
+    "CSRGraph",
+    "csr_from_edges",
+    "degrees",
+    "neighbors_padded",
+    "rmat_graph",
+    "erdos_renyi_graph",
+    "powerlaw_graph",
+    "RangePartition",
+    "partition_by_vertex_range",
+]

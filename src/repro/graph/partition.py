@@ -1,0 +1,89 @@
+"""Contiguous vertex-range graph partitioning (paper §V-A).
+
+The paper partitions by assigning a contiguous, equal range of vertices and
+*all their neighbor lists* to one partition, because sampling requires every
+edge of a vertex to be present to compute transition probabilities, and
+because range membership is decidable in O(1) (``vertex // range_size``),
+which the workload-aware scheduler relies on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+
+@dataclasses.dataclass
+class RangePartition:
+    """One partition: vertices [vertex_lo, vertex_hi) with their full rows."""
+
+    pid: int
+    vertex_lo: int
+    vertex_hi: int
+    # Local CSR over the owned vertex range. indptr is re-based to 0; indices
+    # remain *global* vertex ids (edges may point to any partition).
+    indptr: np.ndarray
+    indices: np.ndarray
+    weights: np.ndarray
+
+    @property
+    def num_vertices(self) -> int:
+        return self.vertex_hi - self.vertex_lo
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+    def nbytes(self) -> int:
+        return self.indptr.nbytes + self.indices.nbytes + self.weights.nbytes
+
+    def to_device_csr(self, total_vertices: int) -> CSRGraph:
+        """Materialize a device CSR covering the full vertex id space.
+
+        Vertices outside [lo, hi) get empty rows so global vertex ids index
+        directly — mirrors the paper keeping global ids in partition queues.
+        """
+        indptr = np.zeros(total_vertices + 1, dtype=np.int32)
+        local = self.indptr.astype(np.int32)
+        indptr[self.vertex_lo + 1 : self.vertex_hi + 1] = local[1:]
+        indptr[self.vertex_hi + 1 :] = local[-1]
+        return CSRGraph(
+            indptr=jnp.asarray(indptr),
+            indices=jnp.asarray(self.indices, dtype=jnp.int32),
+            weights=jnp.asarray(self.weights, dtype=jnp.float32),
+        )
+
+
+def partition_by_vertex_range(graph: CSRGraph, num_partitions: int) -> List[RangePartition]:
+    """Split a CSRGraph into ``num_partitions`` contiguous vertex ranges."""
+    indptr = np.asarray(graph.indptr)
+    indices = np.asarray(graph.indices)
+    weights = np.asarray(graph.weights)
+    n = indptr.shape[0] - 1
+    bounds = np.linspace(0, n, num_partitions + 1).astype(np.int64)
+    parts: List[RangePartition] = []
+    for pid in range(num_partitions):
+        lo, hi = int(bounds[pid]), int(bounds[pid + 1])
+        e_lo, e_hi = int(indptr[lo]), int(indptr[hi])
+        local_indptr = (indptr[lo : hi + 1] - indptr[lo]).astype(np.int32)
+        parts.append(
+            RangePartition(
+                pid=pid,
+                vertex_lo=lo,
+                vertex_hi=hi,
+                indptr=local_indptr,
+                indices=indices[e_lo:e_hi].copy(),
+                weights=weights[e_lo:e_hi].copy(),
+            )
+        )
+    return parts
+
+
+def partition_of(vertex: np.ndarray | int, num_vertices: int, num_partitions: int):
+    """O(1) partition lookup (paper's third reason for range partitioning)."""
+    bounds = np.linspace(0, num_vertices, num_partitions + 1).astype(np.int64)
+    return np.clip(np.searchsorted(bounds, np.asarray(vertex), side="right") - 1, 0, num_partitions - 1)

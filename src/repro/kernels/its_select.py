@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: fused ITS selection with bipartite region search.
+
+TPU mapping of the paper's warp-centric SELECT (DESIGN.md §2, §6):
+
+- grid over *instance blocks* — each grid step owns ``(BLK_I, P)`` bias rows
+  resident in VMEM (the paper's "one warp per instance" becomes "one tile of
+  instances per grid step"; the K draws of an instance occupy vector lanes).
+- prefix-sum + normalize + search + BRS retry are fused in one kernel: the
+  CTPS never round-trips to HBM (the paper's key win over updated sampling).
+- all gathers are one-hot contractions (MXU) — no atomics, no irregular
+  addressing; within-round collisions resolve by lane priority (K×K conflict
+  matrix), replacing the strided atomic bitmap.
+- the retry budget is a static ``ITERS`` unroll of pre-generated randoms
+  (counted RNG outside the kernel keeps it deterministic and testable).
+
+VMEM budget: biases+CTPS+mask ≈ 3·BLK_I·P·4B; with BLK_I=8, P=2048 ≈ 200 KiB,
+comfortably inside ~16 MiB VMEM with room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-12
+
+
+def _its_select_kernel(biases_ref, rands_ref, out_ref, *, iters: int, k: int):
+    b = jnp.maximum(biases_ref[...].astype(jnp.float32), 0.0)  # (BLK_I, P)
+    blk_i, p = b.shape
+    sums = jnp.cumsum(b, axis=-1)
+    total = jnp.maximum(sums[:, -1:], _EPS)
+    ctps = sums / total
+    lower = jnp.concatenate([jnp.zeros_like(ctps[:, :1]), ctps[:, :-1]], axis=-1)
+    navail = jnp.sum((b > 0).astype(jnp.int32), axis=-1)
+    want = jnp.minimum(navail, k)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (blk_i, k), 1)
+
+    done = lane >= want[:, None]
+    out = jnp.full((blk_i, k), -1, jnp.int32)
+    selmask = jnp.zeros((blk_i, p), jnp.float32)
+
+    def gather(table, idx):
+        oh = (idx[:, :, None] == jax.lax.broadcasted_iota(jnp.int32, (blk_i, k, p), 2)).astype(
+            table.dtype
+        )
+        return jnp.einsum("ikp,ip->ik", oh, table, preferred_element_type=jnp.float32)
+
+    def search(r):
+        idx = jnp.sum((ctps[:, None, :] <= r[:, :, None]).astype(jnp.int32), axis=-1)
+        return jnp.clip(idx, 0, p - 1)
+
+    def body(it, carry):
+        done, out, selmask = carry
+        r1 = jax.lax.dynamic_slice_in_dim(rands_ref[...], it, 1, axis=1)[:, 0, :]
+        idx1 = search(r1)
+        hit1 = gather(selmask, idx1) > 0.5
+        l = gather(lower, idx1)
+        h = gather(ctps, idx1)
+        delta = h - l
+        r2 = r1 * (1.0 - delta)
+        r2 = jnp.where(r2 < l, r2, r2 + delta)
+        r2 = jnp.clip(r2, 0.0, 1.0 - _EPS)
+        idx2 = search(r2)
+        hit2 = gather(selmask, idx2) > 0.5
+        cand = jnp.where(hit1, idx2, idx1)
+        ok = jnp.logical_and(~done, ~jnp.where(hit1, hit2, hit1))
+        ok = jnp.logical_and(ok, gather(b, cand) > 0)
+        # K×K conflict matrix: lowest lane wins (replaces atomic bitmap)
+        eq = cand[:, :, None] == cand[:, None, :]
+        both = ok[:, :, None] & ok[:, None, :]
+        tri = (
+            jax.lax.broadcasted_iota(jnp.int32, (k, k), 1)
+            < jax.lax.broadcasted_iota(jnp.int32, (k, k), 0)
+        )
+        beaten = jnp.any(eq & both & tri[None], axis=-1)
+        win = ok & ~beaten
+        out = jnp.where(win, cand, out)
+        oh = (
+            cand[:, :, None] == jax.lax.broadcasted_iota(jnp.int32, (blk_i, k, p), 2)
+        ) & win[:, :, None]
+        selmask = jnp.maximum(selmask, jnp.max(oh.astype(jnp.float32), axis=1))
+        done = done | win
+        got = jnp.sum(done.astype(jnp.int32), axis=-1)
+        done = done | ((got >= want)[:, None] & (lane >= want[:, None]))
+        return done, out, selmask
+
+    done, out, selmask = jax.lax.fori_loop(0, iters, body, (done, out, selmask))
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("blk_i", "interpret"))
+def its_select_pallas(
+    biases: jax.Array,
+    rands: jax.Array,
+    *,
+    blk_i: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused without-replacement ITS+BRS selection.
+
+    biases: (I, P) float — per-instance candidate biases (<=0 → unselectable).
+    rands:  (I, ITERS, K) float — pre-generated retry budget.
+    Returns indices (I, K) int32 (-1 = unfilled).
+
+    I must be a multiple of ``blk_i``; P should be lane-aligned (mult. of 128)
+    for best TPU layout (any P works functionally).
+    """
+    i_dim, p = biases.shape
+    iters, k = rands.shape[1], rands.shape[2]
+    assert i_dim % blk_i == 0, f"I={i_dim} not a multiple of blk_i={blk_i}"
+    kernel = functools.partial(_its_select_kernel, iters=iters, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(i_dim // blk_i,),
+        in_specs=[
+            pl.BlockSpec((blk_i, p), lambda i: (i, 0)),
+            pl.BlockSpec((blk_i, iters, k), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk_i, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((i_dim, k), jnp.int32),
+        interpret=interpret,
+    )(biases, rands)

@@ -1,0 +1,64 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On this CPU container kernels execute with ``interpret=True`` (the kernel
+body runs in Python, validating logic and tiling); on TPU the same calls
+compile through Mosaic.  Wrappers own RNG (counted threefry outside the
+kernel) and shape plumbing (padding, bucketing).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.csr import CSRGraph
+from repro.kernels.its_select import its_select_pallas
+from repro.kernels.walk_step import pad_csr_for_kernel, walk_step_pallas
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "blk_i"))
+def its_select(
+    key: jax.Array,
+    biases: jax.Array,
+    k: int,
+    *,
+    iters: int = 8,
+    blk_i: int = 8,
+) -> jax.Array:
+    """Without-replacement ITS+BRS selection of ``k`` of P candidates.
+
+    biases: (I, P); returns (I, K) int32 indices, -1 where unfilled.
+    """
+    i_dim, p = biases.shape
+    pad_i = (-i_dim) % blk_i
+    if pad_i:
+        biases = jnp.pad(biases, ((0, pad_i), (0, 0)))
+    rands = jax.random.uniform(key, (biases.shape[0], iters, k), dtype=jnp.float32)
+    out = its_select_pallas(biases, rands, blk_i=blk_i, interpret=not _ON_TPU)
+    return out[:i_dim]
+
+
+@functools.partial(jax.jit, static_argnames=("max_seg",))
+def walk_step(
+    key: jax.Array,
+    graph: CSRGraph,
+    cur: jax.Array,
+    *,
+    max_seg: int = 512,
+) -> jax.Array:
+    """One weighted random-walk step for all walkers via the fused kernel.
+
+    Requires max degree <= max_seg (checked by caller / engine bucketing).
+    cur: (W,) int32 (-1 = finished walker). Returns next (W,) int32.
+    """
+    safe = jnp.maximum(cur, 0)
+    starts = graph.indptr[safe]
+    degs = jnp.where(cur >= 0, graph.indptr[safe + 1] - starts, 0)
+    indices, weights = pad_csr_for_kernel(graph.indices, graph.weights, max_seg)
+    rand = jax.random.uniform(key, cur.shape, dtype=jnp.float32)
+    return walk_step_pallas(
+        starts, degs, indices, weights, rand, max_seg=max_seg, interpret=not _ON_TPU
+    )

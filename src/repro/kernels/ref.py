@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each oracle consumes the *same* pre-generated random budget as its kernel and
+performs bit-identical math, so tests can ``assert_allclose`` (exact for the
+integer outputs) across shapes and dtypes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def _onehot_gather(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather along the last axis via a one-hot contraction (MXU-friendly —
+    mirrors the kernel exactly, including its numerics)."""
+    oh = jax.nn.one_hot(idx, table.shape[-1], dtype=table.dtype)
+    return jnp.einsum("...kp,...p->...k", oh, table)
+
+
+def its_select_ref(biases: jax.Array, rands: jax.Array) -> jax.Array:
+    """ITS + bipartite-region-search without replacement (oracle).
+
+    biases: (I, P) float; rands: (I, ITERS, K) float in [0,1).
+    Returns selected indices (I, K) int32, -1 where the random budget was
+    exhausted or no candidate remains.
+    """
+    i_dim, p = biases.shape
+    iters, k = rands.shape[1], rands.shape[2]
+    b = jnp.maximum(biases.astype(jnp.float32), 0.0)
+    sums = jnp.cumsum(b, axis=-1)
+    total = jnp.maximum(sums[:, -1:], _EPS)
+    ctps = sums / total
+    lower = jnp.concatenate([jnp.zeros_like(ctps[:, :1]), ctps[:, :-1]], axis=-1)
+    navail = jnp.sum(b > 0, axis=-1)
+    want = jnp.minimum(navail, k)
+
+    def search(r):
+        idx = jnp.sum(ctps[:, None, :] <= r[:, :, None], axis=-1)
+        return jnp.clip(idx, 0, p - 1).astype(jnp.int32)
+
+    def body(it, carry):
+        done, out, selmask = carry
+        r1 = rands[:, it, :]
+        idx1 = search(r1)
+        hit1 = _onehot_gather(selmask.astype(jnp.float32), idx1) > 0.5
+        l = _onehot_gather(lower, idx1)
+        h = _onehot_gather(ctps, idx1)
+        delta = h - l
+        r2 = r1 * (1.0 - delta)
+        r2 = jnp.where(r2 < l, r2, r2 + delta)
+        r2 = jnp.clip(r2, 0.0, 1.0 - _EPS)
+        idx2 = search(r2)
+        hit2 = _onehot_gather(selmask.astype(jnp.float32), idx2) > 0.5
+        cand = jnp.where(hit1, idx2, idx1)
+        ok = ~done & ~jnp.where(hit1, hit2, hit1)
+        ok = ok & (_onehot_gather(b, cand) > 0)
+        eq = cand[:, :, None] == cand[:, None, :]
+        both = ok[:, :, None] & ok[:, None, :]
+        beaten = jnp.any(eq & both & jnp.tril(jnp.ones((k, k), bool), -1), axis=-1)
+        win = ok & ~beaten
+        out = jnp.where(win, cand, out)
+        oh = jax.nn.one_hot(jnp.where(win, cand, 0), p, dtype=bool) & win[..., None]
+        selmask = selmask | jnp.any(oh, axis=-2)
+        done = done | win
+        got = jnp.sum(done, axis=-1)
+        done = done | ((got >= want)[..., None] & (jnp.arange(k) >= want[..., None]))
+        return done, out, selmask
+
+    done0 = jnp.arange(k)[None, :] >= want[:, None]
+    out0 = jnp.full((i_dim, k), -1, jnp.int32)
+    sel0 = jnp.zeros((i_dim, p), bool)
+    _, out, _ = jax.lax.fori_loop(0, iters, body, (done0, out0, sel0))
+    return out
+
+
+def walk_step_ref(
+    starts: jax.Array,
+    degs: jax.Array,
+    indices: jax.Array,
+    weights: jax.Array,
+    rand: jax.Array,
+    max_seg: int,
+) -> jax.Array:
+    """One weighted ITS walk step per walker (oracle for walk_step kernel).
+
+    starts/degs: (W,) row start offsets and degrees (deg <= max_seg);
+    indices/weights: flat CSR arrays; rand: (W,) uniforms.
+    Returns next vertex (W,) int32, -1 for dead ends.
+    """
+    offs = jnp.arange(max_seg, dtype=jnp.int32)
+    idx = starts[:, None] + offs[None, :]
+    mask = offs[None, :] < degs[:, None]
+    w = jnp.where(mask, weights[jnp.where(mask, idx, 0)], 0.0)
+    cum = jnp.cumsum(w, axis=-1)
+    total = cum[:, -1]
+    target = rand * total
+    pick = jnp.sum((cum <= target[:, None]) & mask, axis=-1)
+    pick = jnp.minimum(pick, jnp.maximum(degs - 1, 0))
+    nxt = indices[jnp.clip(starts + pick, 0, indices.shape[0] - 1)]
+    return jnp.where((degs > 0) & (total > 0), nxt, -1).astype(jnp.int32)

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: fused random-walk step (segment DMA + ITS draw).
+
+One grid step advances one walker: the walker's CSR neighbor segment is
+DMA'd into VMEM by BlockSpec index_maps driven by scalar-prefetched row
+starts (the TPU analogue of the paper's coalesced warp loads), then the
+weighted ITS draw happens entirely in VMEM.
+
+Degree bucketing (DESIGN.md §6): segments must satisfy ``deg <= max_seg``;
+the engine routes larger rows through ``select.walk_transition_chunked``.
+A segment can straddle a ``max_seg`` block boundary, so the index_maps pull
+TWO consecutive blocks (same input bound twice with maps ``blk`` and
+``blk+1``) and the kernel offsets into their concatenation.  Edge arrays must
+be padded with one extra trailing block so ``blk+1`` always exists.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_EPS = 1e-12
+
+
+def _walk_step_kernel(
+    starts_ref,  # scalar-prefetch (W,)
+    degs_ref,  # scalar-prefetch (W,)
+    rand_ref,  # (1,) this walker's uniform
+    idx_lo_ref,  # (max_seg,) neighbor-id block containing `start`
+    idx_hi_ref,  # (max_seg,) following block
+    w_lo_ref,  # (max_seg,) weight blocks
+    w_hi_ref,
+    out_ref,  # (1,) next vertex
+    *,
+    max_seg: int,
+):
+    w = pl.program_id(0)
+    start = starts_ref[w]
+    deg = degs_ref[w]
+    local = start % max_seg  # offset inside the 2-block window
+    offs = jax.lax.broadcasted_iota(jnp.int32, (2 * max_seg,), 0)
+    mask = (offs >= local) & (offs < local + deg)
+    wts = jnp.where(mask, jnp.concatenate([w_lo_ref[...], w_hi_ref[...]]), 0.0)
+    cum = jnp.cumsum(wts)
+    total = cum[-1]
+    target = rand_ref[0] * total
+    # index of the edge whose cumulative bias crosses target
+    pick = jnp.sum(((cum <= target) & mask).astype(jnp.int32))
+    pick = jnp.minimum(local + pick, local + jnp.maximum(deg - 1, 0))
+    ids = jnp.concatenate([idx_lo_ref[...], idx_hi_ref[...]])
+    oh = (offs == pick).astype(jnp.float32)
+    nxt = jnp.sum(oh * ids.astype(jnp.float32)).astype(jnp.int32)
+    dead = (deg <= 0) | (total <= _EPS)
+    out_ref[0] = jnp.where(dead, -1, nxt)
+
+
+def pad_csr_for_kernel(indices: jax.Array, weights: jax.Array, max_seg: int):
+    """Pad flat CSR edge arrays to a block multiple plus one spill block."""
+    e = indices.shape[0]
+    target = ((e + max_seg - 1) // max_seg + 1) * max_seg
+    pad = target - e
+    return (
+        jnp.pad(indices, (0, pad), constant_values=0),
+        jnp.pad(weights, (0, pad), constant_values=0.0),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("max_seg", "interpret"))
+def walk_step_pallas(
+    starts: jax.Array,
+    degs: jax.Array,
+    indices: jax.Array,
+    weights: jax.Array,
+    rand: jax.Array,
+    *,
+    max_seg: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """One weighted walk step for W walkers.
+
+    starts/degs: (W,) int32 row offsets/degrees (deg <= max_seg);
+    indices/weights: flat CSR arrays padded via :func:`pad_csr_for_kernel`;
+    rand: (W,) uniforms.  Returns next vertices (W,) int32 (-1 dead end).
+    """
+    w = starts.shape[0]
+    e = indices.shape[0]
+    assert e % max_seg == 0, "pad CSR edge arrays with pad_csr_for_kernel"
+
+    def lo_map(i, starts_ref, degs_ref):
+        return (starts_ref[i] // max_seg,)
+
+    def hi_map(i, starts_ref, degs_ref):
+        return (starts_ref[i] // max_seg + 1,)
+
+    def per_walker(i, starts_ref, degs_ref):
+        return (i,)
+
+    kernel = functools.partial(_walk_step_kernel, max_seg=max_seg)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(w,),
+        in_specs=[
+            pl.BlockSpec((1,), per_walker),
+            pl.BlockSpec((max_seg,), lo_map),
+            pl.BlockSpec((max_seg,), hi_map),
+            pl.BlockSpec((max_seg,), lo_map),
+            pl.BlockSpec((max_seg,), hi_map),
+        ],
+        out_specs=pl.BlockSpec((1,), per_walker),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.int32),
+        interpret=interpret,
+    )(starts, degs, rand, indices, indices, weights, weights)

@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape × mesh) cell against the production meshes and
+record memory/cost/collective analysis for the roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-7b --shape train_4k [--multipod]
+  python -m repro.launch.dryrun --all [--multipod] [--skip-existing]
+
+Outputs one JSON per cell under results/dryrun/<mesh>/<arch>__<shape>.json.
+No arrays are ever allocated: params/optimizer/cache enter as
+ShapeDtypeStructs through .lower().
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import shapes as shp
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as m
+from repro.train import optimizer as opt
+from repro.train.train_step import (
+    cache_specs,
+    make_prefill,
+    make_serve_step,
+    make_train_step,
+)
+from repro.distributed import sharding as shd
+
+# v5e hardware model (DESIGN.md §7)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+HBM_CAP = 16e9  # bytes per chip
+
+
+def _metric(d: dict, *names, default=0.0):
+    for n in names:
+        if n in d:
+            return float(d[n])
+    return default
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str, overrides: dict | None = None) -> dict:
+    import dataclasses
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    # launcher policy: pure-DP mode needs the global batch to fill the mesh;
+    # otherwise fall back to TP (xlstm on 512 chips with batch 256 — §Perf)
+    n_chips = 512 if multi_pod else 256
+    if cfg.tp_mode == "dp" and shp.SHAPES[shape_name]["batch"] < n_chips:
+        cfg = dataclasses.replace(cfg, tp_mode="model", microbatches=max(cfg.microbatches, 2))
+    ok, why = shp.cell_applicable(cfg, shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: dict = {
+        "arch": cfg.name,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "status": "skip" if not ok else "pending",
+    }
+    if not ok:
+        rec["skip_reason"] = why
+        return _save(rec, out_dir)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    sh = shp.SHAPES[shape_name]
+    specs = shp.input_specs(cfg, shape_name)
+    t0 = time.time()
+
+    with mesh:
+        if sh["kind"] == "train":
+            ocfg = opt.OptConfig(kind=cfg.optimizer)
+            step_fn, (pspecs, ospecs, _) = make_train_step(cfg, ocfg, mesh, global_batch=sh["batch"])
+            params = m.abstract_params(cfg)
+            opt_state = jax.eval_shape(lambda p: opt.opt_init(ocfg, p), params)
+            step = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = step_fn.lower(params, opt_state, step, specs)
+        elif sh["kind"] == "prefill":
+            fn, _ = make_prefill(cfg, mesh)
+            params = m.abstract_params(cfg)
+            lowered = fn.lower(params, specs)
+        else:  # decode
+            fn, _ = make_serve_step(cfg, mesh, batch=sh["batch"], max_len=sh["seq"])
+            params = m.abstract_params(cfg)
+            cache = m.abstract_cache(cfg, sh["batch"], sh["seq"])
+            lowered = fn.lower(params, cache, specs["tokens"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # loop-aware analysis (XLA's cost_analysis counts while bodies once —
+    # scanned layers would be undercounted n_rep×; see hlo_analysis.py)
+    hc = analyze(hlo)
+    del hlo
+    coll = hc.collectives
+    wires = hc.wire_bytes
+
+    flops_dev = hc.flops
+    bytes_dev = hc.bytes_accessed
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_coll = wires / ICI_BW
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    n_params = cfg.param_count()
+    if sh["kind"] == "train":
+        tokens = sh["batch"] * sh["seq"]
+        model_flops = 6 * cfg.active_param_count() * tokens
+    elif sh["kind"] == "prefill":
+        tokens = sh["batch"] * sh["seq"]
+        model_flops = 2 * cfg.active_param_count() * tokens
+    else:
+        tokens = sh["batch"]  # one token per sequence
+        model_flops = 2 * cfg.active_param_count() * tokens
+    hlo_flops_total = flops_dev * chips
+    useful = model_flops / hlo_flops_total if hlo_flops_total else 0.0
+
+    rec.update(
+        status="ok",
+        chips=chips,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        peak_memory_bytes=int(getattr(mem, "peak_memory_in_bytes", 0)),
+        argument_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+        output_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+        temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+        alias_bytes=int(getattr(mem, "alias_size_in_bytes", 0)),
+        # device-resident bytes = args (params/opt/cache) + temps − donated
+        fits_hbm=bool(
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0)
+            < HBM_CAP
+        ),
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        xla_raw_flops=_metric(cost, "flops"),
+        xla_raw_bytes=_metric(cost, "bytes accessed"),
+        collectives={k: v for k, v in coll.items() if v["count"]},
+        wire_bytes_per_device=wires,
+        roofline=terms,
+        dominant=dominant,
+        model_flops=model_flops,
+        useful_flop_ratio=round(useful, 4),
+        tokens=tokens,
+    )
+    return _save(rec, out_dir)
+
+
+def _save(rec: dict, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{rec['arch']}__{rec['shape']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(shp.SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument(
+        "--override", action="append", default=[],
+        help="config override key=value (perf iterations; use with --out results/hillclimb)",
+    )
+    args = ap.parse_args()
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+
+    mesh_name = "pod2x16x16" if args.multipod else "pod16x16"
+    out_dir = os.path.join(args.out, mesh_name)
+
+    if args.all:
+        # one fresh subprocess per cell: bounds compile-cache/arena growth
+        # and makes the sweep restartable cell-by-cell.
+        for a in ARCH_IDS:
+            for s in shp.SHAPES:
+                cfg_name = get_config(a).name
+                path = os.path.join(out_dir, f"{cfg_name}__{s}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip existing] {cfg_name} {s}", flush=True)
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", a, "--shape", s, "--out", args.out]
+                if args.multipod:
+                    cmd.append("--multipod")
+                subprocess.run(cmd, check=False)
+        return
+
+    cells = []
+    assert args.arch and args.shape, "--arch/--shape or --all"
+    cells.append((args.arch, args.shape))
+
+    for arch, shape_name in cells:
+        cfg_name = get_config(arch).name
+        path = os.path.join(out_dir, f"{cfg_name}__{shape_name}.json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[skip existing] {cfg_name} {shape_name}")
+            continue
+        print(f"[dryrun] {cfg_name} × {shape_name} × {mesh_name} {overrides or ''} ...", flush=True)
+        try:
+            rec = run_cell(arch, shape_name, args.multipod, out_dir, overrides)
+            if rec["status"] == "ok":
+                print(
+                    f"  ok: compile={rec['compile_s']}s peak={rec['peak_memory_bytes']/1e9:.2f}GB "
+                    f"flops/dev={rec['flops_per_device']:.3e} dominant={rec['dominant']} "
+                    f"useful={rec['useful_flop_ratio']}",
+                    flush=True,
+                )
+                print("  memory_analysis:", {
+                    "peak": rec["peak_memory_bytes"], "args": rec["argument_bytes"],
+                    "temp": rec["temp_bytes"]})
+                print("  cost_analysis:", {
+                    "flops": rec["flops_per_device"], "bytes": rec["bytes_per_device"]})
+            else:
+                print(f"  SKIP: {rec.get('skip_reason')}", flush=True)
+        except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+            rec = {
+                "arch": cfg_name, "shape": shape_name, "mesh": mesh_name,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:],
+            }
+            _save(rec, out_dir)
+            print(f"  ERROR: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Production mesh construction (DESIGN.md §5).
+
+A FUNCTION (not module-level state) so importing never touches jax device
+state — the dry-run must set XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,57 @@
+"""Assigned input-shape cells and ``input_specs`` (ShapeDtypeStruct only).
+
+Cell policy (DESIGN.md §4):
+  - train_4k    → train_step      (seq 4096,   global_batch 256)
+  - prefill_32k → prefill         (seq 32768,  global_batch 32)
+  - decode_32k  → serve_step      (KV cache 32768, global_batch 128)
+  - long_500k   → serve_step      (KV cache 524288, global_batch 1);
+                  sub-quadratic archs only (ssm/hybrid/mostly-local).
+For ``[audio]``/``[vlm]`` archs the frontend is a stub: ``frontend_emb``
+ShapeDtypeStructs stand in for precomputed frame/patch embeddings and the
+token span shrinks so total sequence length matches the assigned seq_len.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+SHAPES = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+# archs allowed to run long_500k (sub-quadratic decode memory/compute)
+LONG_OK = {"xlstm-350m", "recurrentgemma-9b", "gemma3-1b"}
+
+
+def cell_applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and cfg.name not in LONG_OK:
+        return False, "pure full-attention arch: 512k KV decode skipped (DESIGN.md §4)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sh = SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    f = cfg.frontend_tokens if cfg.frontend != "none" else 0
+    tok = jax.ShapeDtypeStruct((b, s - f), jnp.int32)
+    specs: dict = {}
+    if sh["kind"] == "train":
+        specs["tokens"] = tok
+        specs["labels"] = jax.ShapeDtypeStruct((b, s - f), jnp.int32)
+        if f:
+            specs["frontend_emb"] = jax.ShapeDtypeStruct((b, f, cfg.d_model), jnp.dtype(cfg.dtype))
+    elif sh["kind"] == "prefill":
+        specs["tokens"] = tok
+        if f:
+            specs["frontend_emb"] = jax.ShapeDtypeStruct((b, f, cfg.d_model), jnp.dtype(cfg.dtype))
+    else:  # decode
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    return specs

@@ -1,0 +1,24 @@
+"""Model zoo: composable decoder LM supporting all assigned architectures."""
+from repro.models.model import (
+    abstract_cache,
+    abstract_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    model_defs,
+    param_logical_axes,
+)
+
+__all__ = [
+    "abstract_cache",
+    "abstract_params",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "model_defs",
+    "param_logical_axes",
+]

@@ -1,0 +1,226 @@
+"""GQA attention with exact-causal blocked online softmax.
+
+Design (DESIGN.md §6): attention stays in XLA-visible JAX so the dry-run
+``cost_analysis()`` captures true FLOPs/bytes.  To keep 32k-512k sequences
+inside HBM we use flash-style blocking, and to avoid the usual 2× masked-FLOP
+overcount we exploit that block pairs are *static*: a python-unrolled loop
+over q chunks gives each q chunk its own inner ``lax.scan`` over exactly the
+kv chunks it can see (causal prefix, or the sliding window) — exact FLOPs,
+static shapes, bounded VMEM/HBM transients.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDef, ashard, model_divides, rms_norm, rope, rp_einsum, softcap
+
+NEG_INF = -1e30
+
+
+def pick_chunk(s: int, chunk: int) -> int:
+    """Largest divisor of ``s`` not exceeding ``chunk`` (exact blocking)."""
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def attn_defs(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", None)),
+        "wk": ParamDef((d, kv, hd), ("embed", "kv_heads", None)),
+        "wv": ParamDef((d, kv, hd), ("embed", "kv_heads", None)),
+        "wo": ParamDef((h, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.use_qk_norm:
+        defs["qnorm"] = ParamDef((hd,), (None,), init="zeros")
+        defs["knorm"] = ParamDef((hd,), (None,), init="zeros")
+    return defs
+
+
+def _qkv(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    q = ashard(jnp.einsum("bsd,dhk->bshk", x, params["wq"]), "batch", None, "model", None)
+    k = ashard(jnp.einsum("bsd,dhk->bshk", x, params["wk"]), "batch", None, "model", None)
+    v = ashard(jnp.einsum("bsd,dhk->bshk", x, params["wv"]), "batch", None, "model", None)
+    if cfg.use_qk_norm:
+        q = rms_norm(q, params["qnorm"], cfg.norm_eps)
+        k = rms_norm(k, params["knorm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _block_pair(
+    q_blk: jax.Array,  # (B, Cq, H, Dh)
+    k_span: jax.Array,  # (B, n, Ckv, H, Dh) — KV already repeated to H heads
+    v_span: jax.Array,
+    q_pos: jax.Array,  # (Cq,)
+    kv_pos: jax.Array,  # (n, Ckv)
+    *,
+    scale: float,
+    window: int,
+    cap: float,
+    heads_ok: bool = True,
+    scores_dtype=jnp.float32,
+):
+    """Online-softmax accumulate q block against its kv span (scan over n).
+
+    KV is pre-repeated to the full head count so the score tensors carry the
+    sharded ``heads`` dim even when kv_heads doesn't divide the model axis
+    (GQA reshape would otherwise force replication — a 16× activation blowup
+    on archs like internlm2 kv=8 on a model=16 mesh).
+    """
+    b, cq, h, dh = q_blk.shape
+    # when heads don't divide the model axis (xlstm 4H, musicgen 24H, ...)
+    # shard the q-chunk dim instead — sequence-block parallelism: scores
+    # (B, H, Cq/model, Ckv) stay distributed, kv chunks replicate (small).
+    if heads_ok:
+        shd_q = lambda t: ashard(t, "batch", None, "model", None)
+        shd_s = lambda t: ashard(t, "batch", "model", None)  # (B,H,Cq)
+        shd_a = lambda t: ashard(t, "batch", "model", None, None)
+    else:
+        shd_q = lambda t: ashard(t, "batch", "model", None, None)
+        shd_s = lambda t: ashard(t, "batch", None, "model")
+        shd_a = lambda t: ashard(t, "batch", None, "model", None)
+    q_blk = shd_q(q_blk)
+
+    neg_big = jnp.asarray(NEG_INF if scores_dtype == jnp.float32 else -3e38 / 1e4, scores_dtype)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kc, vc, pos = xs  # (B,Ckv,H,Dh), (B,Ckv,H,Dh), (Ckv,)
+        s = jnp.einsum(
+            "bqhd,bchd->bhqc", q_blk, kc, preferred_element_type=scores_dtype
+        ) * jnp.asarray(scale, scores_dtype)
+        s = softcap(s, cap)
+        msk = pos[None, :] <= q_pos[:, None]  # causal (Cq, Ckv)
+        if window > 0:
+            msk &= pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(msk[None, None], s, neg_big)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1).astype(jnp.float32))
+        p = jnp.exp(s.astype(jnp.float32) - m_new[..., None]).astype(scores_dtype)
+        p = jnp.where(msk[None, None], p, jnp.asarray(0.0, scores_dtype))
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1, dtype=jnp.float32)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqc,bchd->bhqd", p.astype(kc.dtype), vc, preferred_element_type=jnp.float32
+        )
+        return (m_new, l, acc), None
+
+    m0 = shd_s(jnp.full((b, h, cq), NEG_INF, jnp.float32))
+    l0 = shd_s(jnp.zeros((b, h, cq), jnp.float32))
+    a0 = shd_a(jnp.zeros((b, h, cq, dh), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (k_span.swapaxes(0, 1), v_span.swapaxes(0, 1), kv_pos))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out  # (B, H, Cq, Dh)
+
+
+def blocked_attention(
+    q: jax.Array,  # (B, S, H, Dh)
+    k: jax.Array,  # (B, S, KVH, Dh)
+    v: jax.Array,
+    cfg: ModelConfig,
+    *,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = dh**-0.5
+    cq = ckv = pick_chunk(s, cfg.attn_chunk)
+    nq = s // cq
+    if g > 1:  # repeat KV to full heads: q head i uses kv head i // g
+        k = ashard(jnp.repeat(k, g, axis=2), "batch", None, "model", None)
+        v = ashard(jnp.repeat(v, g, axis=2), "batch", None, "model", None)
+    qg = q.reshape(b, nq, cq, h, dh)
+    kc = k.reshape(b, s // ckv, ckv, h, dh)
+    vc = v.reshape(b, s // ckv, ckv, h, dh)
+    outs = []
+    for qi in range(nq):
+        q_lo = qi * cq
+        if window > 0:
+            ki_lo = max(0, (q_lo - window) // ckv)
+        else:
+            ki_lo = 0
+        ki_hi = (q_lo + cq - 1) // ckv  # inclusive
+        n = ki_hi - ki_lo + 1
+        q_pos = q_offset + q_lo + jnp.arange(cq)
+        kv_pos = (
+            q_offset
+            + (ki_lo * ckv)
+            + jnp.arange(n * ckv).reshape(n, ckv)
+        )
+        out = _block_pair(
+            qg[:, qi],
+            jax.lax.slice_in_dim(kc, ki_lo, ki_hi + 1, axis=1),
+            jax.lax.slice_in_dim(vc, ki_lo, ki_hi + 1, axis=1),
+            q_pos,
+            kv_pos,
+            scale=scale,
+            window=window,
+            cap=cfg.attn_softcap,
+            heads_ok=model_divides(h),
+            scores_dtype=jnp.bfloat16 if cfg.attn_scores_dtype == "bf16" else jnp.float32,
+        )
+        outs.append(out)
+    out = jnp.stack(outs, axis=1)  # (B, nq, H, Cq, Dh)
+    out = out.transpose(0, 1, 3, 2, 4).reshape(b, s, h, dh)
+    return out.astype(q.dtype)
+
+
+def attention_train(
+    params: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array, *, window: int = 0
+) -> jax.Array:
+    """Full-sequence attention (train / prefill). x: (B, S, D)."""
+    q, k, v = _qkv(params, cfg, x, positions)
+    out = blocked_attention(q, k, v, cfg, window=window)
+    return rp_einsum("bshk,hkd->bsd", out, params["wo"], cfg.reduce_dtype)
+
+
+def attention_decode(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, 1, D)
+    cache_k: jax.Array,  # (B, S_max, KVH, Dh)
+    cache_v: jax.Array,
+    cache_index: jax.Array,  # () int32 — # tokens already in cache
+    *,
+    window: int = 0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a KV cache. Returns (out, new_k, new_v)."""
+    b, _, d = x.shape
+    positions = jnp.full((b, 1), cache_index, jnp.int32)
+    q, k, v = _qkv(params, cfg, x, positions)
+    s_max = cache_k.shape[1]
+    if window > 0:
+        # ring buffer for sliding-window layers: KV footprint O(window)
+        slot = jnp.mod(cache_index, s_max)
+    else:
+        slot = jnp.minimum(cache_index, s_max - 1)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+    kvh = cache_k.shape[2]
+    g = q.shape[2] // kvh
+    qh = q.reshape(b, 1, kvh, g, -1)
+    s = jnp.einsum(
+        "bqkgd,bckd->bkgqc", qh, cache_k, preferred_element_type=jnp.float32
+    ) * (cfg.head_dim**-0.5)
+    s = softcap(s, cfg.attn_softcap)
+    kv_pos = jnp.arange(s_max)
+    if window > 0:
+        # ring buffer sized to the window: every written slot is in range
+        msk = kv_pos < jnp.minimum(cache_index + 1, s_max)
+    else:
+        msk = kv_pos <= cache_index
+    s = jnp.where(msk[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bckd->bqkgd", p.astype(cache_v.dtype), cache_v)
+    out = out.reshape(b, 1, -1, cfg.head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, cache_k, cache_v

@@ -1,0 +1,133 @@
+"""Composable decoder blocks: one function family per layer kind.
+
+Kinds: "global" | "local" (attention), "rglru" (Griffin), "mlstm" | "slstm"
+(xLSTM).  Heterogeneous stacks (gemma3 5:1 local:global, recurrentgemma
+2:1 rglru:attn, xLSTM 7:1) scan over *pattern superblocks* — see model.py.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+from repro.models import recurrent as rec
+from repro.models.layers import ParamDef, rms_norm
+
+
+ATTN_KINDS = ("global", "local", "global_dense")
+
+
+def block_defs(cfg: ModelConfig, kind: str) -> dict:
+    d = cfg.d_model
+    defs: dict = {"norm1": ParamDef((d,), (None,), init="zeros")}
+    if kind in ATTN_KINDS:
+        defs["attn"] = attn.attn_defs(cfg)
+        if cfg.num_experts and kind != "global_dense":
+            defs["norm2"] = ParamDef((d,), (None,), init="zeros")
+            defs["moe"] = moe_mod.moe_defs(cfg)
+            if cfg.moe_dense_ff:
+                defs["dense_ffn"] = ffn_mod.ffn_defs(cfg, cfg.moe_dense_ff)
+        elif cfg.d_ff:
+            defs["norm2"] = ParamDef((d,), (None,), init="zeros")
+            defs["ffn"] = ffn_mod.ffn_defs(cfg)
+    elif kind == "rglru":
+        defs["rnn"] = rec.rglru_defs(cfg)
+        defs["norm2"] = ParamDef((d,), (None,), init="zeros")
+        defs["ffn"] = ffn_mod.ffn_defs(cfg)
+    elif kind == "mlstm":
+        defs["cell"] = rec.mlstm_defs(cfg)
+    elif kind == "slstm":
+        defs["cell"] = rec.slstm_defs(cfg)
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    return defs
+
+
+def block_train(
+    params: dict, cfg: ModelConfig, kind: str, x: jax.Array, positions: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        window = cfg.window_size if kind == "local" else 0
+        x = x + attn.attention_train(params["attn"], cfg, h, positions, window=window)
+        if cfg.num_experts and kind != "global_dense":
+            h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+            y, aux = moe_mod.moe_apply(params["moe"], cfg, h2)
+            if cfg.moe_dense_ff:
+                y = y + ffn_mod.ffn_apply(params["dense_ffn"], cfg, h2)
+            x = x + y
+        elif cfg.d_ff:
+            h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+            x = x + ffn_mod.ffn_apply(params["ffn"], cfg, h2)
+    elif kind == "rglru":
+        x = x + rec.rglru_train(params["rnn"], cfg, h)
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        x = x + ffn_mod.ffn_apply(params["ffn"], cfg, h2)
+    elif kind == "mlstm":
+        x = x + rec.mlstm_train(params["cell"], cfg, h)
+    elif kind == "slstm":
+        x = x + rec.slstm_train(params["cell"], cfg, h)
+    return x, aux
+
+
+def block_cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype) -> dict:
+    if kind in ATTN_KINDS:
+        s = min(cfg.window_size, max_len) if kind == "local" and cfg.window_size else max_len
+        kvh, hd = cfg.num_kv_heads, cfg.head_dim
+        return {
+            "k": jnp.zeros((batch, s, kvh, hd), dtype),
+            "v": jnp.zeros((batch, s, kvh, hd), dtype),
+        }
+    if kind == "rglru":
+        return rec.rglru_init_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return rec.mlstm_init_state(cfg, batch, dtype)
+    if kind == "slstm":
+        return rec.slstm_init_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def block_decode(
+    params: dict,
+    cfg: ModelConfig,
+    kind: str,
+    x: jax.Array,
+    cache: dict,
+    cache_index: jax.Array,
+) -> Tuple[jax.Array, dict]:
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        window = cfg.window_size if kind == "local" else 0
+        y, ck, cv = attn.attention_decode(
+            params["attn"], cfg, h, cache["k"], cache["v"], cache_index, window=window
+        )
+        x = x + y
+        cache = {"k": ck, "v": cv}
+        if cfg.num_experts and kind != "global_dense":
+            h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+            y, _ = moe_mod.moe_apply(params["moe"], cfg, h2)
+            if cfg.moe_dense_ff:
+                y = y + ffn_mod.ffn_apply(params["dense_ffn"], cfg, h2)
+            x = x + y
+        elif cfg.d_ff:
+            h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+            x = x + ffn_mod.ffn_apply(params["ffn"], cfg, h2)
+    elif kind == "rglru":
+        y, cache = rec.rglru_decode(params["rnn"], cfg, h, cache)
+        x = x + y
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        x = x + ffn_mod.ffn_apply(params["ffn"], cfg, h2)
+    elif kind == "mlstm":
+        y, cache = rec.mlstm_decode(params["cell"], cfg, h, cache)
+        x = x + y
+    elif kind == "slstm":
+        y, cache = rec.slstm_decode(params["cell"], cfg, h, cache)
+        x = x + y
+    return x, cache

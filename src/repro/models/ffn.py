@@ -1,0 +1,31 @@
+"""Dense feed-forward blocks (GeGLU / SwiGLU / plain)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ACTIVATIONS, ParamDef, ashard, rp_einsum
+
+
+def ffn_defs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = cfg.d_ff if d_ff is None else d_ff
+    defs = {
+        "wi": ParamDef((d, f), ("embed", "mlp")),
+        "wo": ParamDef((f, d), ("mlp", "embed")),
+    }
+    if cfg.glu:
+        defs["wg"] = ParamDef((d, f), ("embed", "mlp"))
+    return defs
+
+
+def ffn_apply(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    act = ACTIVATIONS[cfg.activation]
+    h = ashard(jnp.einsum("bsd,df->bsf", x, params["wi"]), "batch", None, "model")
+    if cfg.glu:
+        g = ashard(jnp.einsum("bsd,df->bsf", x, params["wg"]), "batch", None, "model")
+        h = act(g) * h
+    else:
+        h = act(h)
+    return rp_einsum("bsf,fd->bsd", h, params["wo"], cfg.reduce_dtype)

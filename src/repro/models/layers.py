@@ -1,0 +1,198 @@
+"""Base layers: param definitions, norms, embeddings, RoPE, causal conv.
+
+Parameters are plain pytrees built from ``ParamDef`` specs so that a single
+source of truth yields (a) initialized arrays, (b) ShapeDtypeStructs for the
+dry-run, and (c) PartitionSpecs from logical axis names (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple  # logical axis names, same length as shape (None = replicated)
+    init: str = "normal"  # normal | zeros | ones | lru_lambda
+    scale: float = 1.0
+
+
+def init_param(key: jax.Array, d: ParamDef, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "lru_lambda":
+        # RG-LRU: Λ init so a = sigmoid(Λ)^(8c) spreads in [0.9, 0.999]
+        u = jax.random.uniform(key, d.shape, jnp.float32, 0.9, 0.999)
+        lam = jnp.log(u ** (1 / 8.0) / (1 - u ** (1 / 8.0)))
+        return lam.astype(dtype)
+    fan_in = d.shape[0] if len(d.shape) >= 2 else max(d.shape[0], 1)
+    std = d.scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_tree(key: jax.Array, defs, dtype) -> dict:
+    """Initialize a (nested) dict of ParamDefs into arrays."""
+    flat, treedef = jax.tree_util.tree_flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    keys = jax.random.split(key, len(flat))
+    arrs = [init_param(k, d, dtype) for k, d in zip(keys, flat)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def shape_tree(defs, dtype) -> dict:
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def axes_tree(defs) -> dict:
+    """Logical-axes pytree matching the params structure."""
+    return jax.tree_util.tree_map(
+        lambda d: d.axes, defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+
+
+# ---------------------------------------------------------------------------
+# ops
+# ---------------------------------------------------------------------------
+
+
+# Activation-sharding mesh: set by the step builders (train_step.py /
+# dryrun) before tracing; None (tests, single device) makes ashard a no-op.
+_ACTIVATION_MESH = None
+# logical "batch"/"model" may be remapped per arch (hillclimb lever), e.g.
+# {"batch": ("data", "model")} for small-head archs.
+_ACTIVATION_RULES: dict = {}
+
+
+def set_activation_mesh(mesh, rules: dict | None = None) -> None:
+    global _ACTIVATION_MESH, _ACTIVATION_RULES
+    _ACTIVATION_MESH = mesh
+    _ACTIVATION_RULES = rules or {}
+
+
+def ashard(x: jax.Array, *logical) -> jax.Array:
+    """Activation sharding constraint from logical axis names.
+
+    Logical names: "batch" (→ fsdp axes), "model" (→ model axis), None.
+    Without these constraints GSPMD picks operand-derived shardings that
+    replicate the global batch through the whole stack (measured 16×
+    activation blowup; EXPERIMENTS.md §Perf iteration 0).
+    Dims that don't divide the target axes stay unsharded.
+    """
+    mesh = _ACTIVATION_MESH
+    if mesh is None:
+        return x
+    axis_names = mesh.axis_names
+    fsdp = tuple(a for a in ("pod", "data") if a in axis_names)
+    default = {"batch": fsdp, "model": ("model",) if "model" in axis_names else ()}
+    parts = []
+    used: set = set()
+    for dim, name in zip(x.shape, logical):
+        cand = _ACTIVATION_RULES.get(name, default.get(name, ()))
+        cand = tuple(a for a in cand if a in axis_names and a not in used)
+        size = 1
+        for a in cand:
+            size *= mesh.shape[a]
+        if cand and dim % size == 0:
+            parts.append(cand if len(cand) > 1 else cand[0])
+            used.update(cand)
+        else:
+            parts.append(None)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*parts)))
+
+
+def model_divides(n: int) -> bool:
+    """True iff the active mesh's model axis evenly shards a dim of size n."""
+    mesh = _ACTIVATION_MESH
+    if mesh is None:
+        return False
+    if "model" in _ACTIVATION_RULES and not _ACTIVATION_RULES["model"]:
+        return False  # tp_mode="dp": model axis remapped to data parallelism
+    return "model" in mesh.axis_names and n % mesh.shape["model"] == 0
+
+
+def rp_einsum(spec: str, x: jax.Array, w: jax.Array, reduce_dtype: str = "f32") -> jax.Array:
+    """Row-parallel einsum (contracts a model-sharded dim → cross-chip
+    partial-sum reduction).  reduce_dtype="bf16" makes the HLO dot emit
+    bf16 so GSPMD's all-reduce moves half the bytes (the MXU still
+    accumulates f32 internally on TPU)."""
+    if reduce_dtype == "bf16" and x.dtype == jnp.bfloat16:
+        return jnp.einsum(spec, x, w, preferred_element_type=jnp.bfloat16)
+    return jnp.einsum(spec, x, w)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with f32 accumulation but NO f32 materialization of x.
+
+    ``x.astype(f32)`` as the first consumer of the residual stream makes
+    XLA store the layer-scan's saved carries in f32 (2× activation memory;
+    measured +12.9GB/device — EXPERIMENTS.md §Perf iteration 0), so the
+    variance is computed via an f32-accumulating einsum on the bf16 values
+    and the normalization stays in the compute dtype.
+    """
+    if x.dtype == jnp.float32:
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        xn = x * jax.lax.rsqrt(var + eps)
+        return xn * (1.0 + scale.astype(jnp.float32))
+    d = x.shape[-1]
+    var = (
+        jnp.einsum("...d,...d->...", x, x, preferred_element_type=jnp.float32) / d
+    )
+    r = jax.lax.rsqrt(var + eps)[..., None].astype(x.dtype)
+    return (x * r) * (1.0 + scale).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding; x: (..., S, H, Dh), positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv along time. x: (B, S, C), w: (C, K).
+
+    Returns (y, new_state) where state holds the last K-1 inputs for decode.
+    """
+    k = w.shape[-1]
+    if state is None:
+        pad = jnp.zeros(x.shape[:-2] + (k - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=-2)  # (B, S+K-1, C)
+    y = sum(xp[..., i : i + x.shape[-2], :] * w[:, i] for i in range(k))
+    new_state = xp[..., -(k - 1) :, :] if k > 1 else pad
+    return y.astype(x.dtype), new_state
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+ACTIVATIONS: dict[str, Callable] = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "geglu": jax.nn.gelu,  # gating handled by the FFN structure
+    "swiglu": jax.nn.silu,
+}

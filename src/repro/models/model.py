@@ -1,0 +1,294 @@
+"""Decoder LM: param construction, train forward, prefill, decode step.
+
+Layer stacks scan over *pattern superblocks* (one repetition of
+``cfg.pattern``) so heterogeneous stacks stay scannable: params for the
+``n_rep`` whole repetitions are stacked on a leading axis and consumed by
+``lax.scan`` (small HLO, fast 512-device compiles); remainder layers are
+unrolled ("tail").  Remat wraps each superblock in train mode.
+
+Modality frontends (musicgen audio frames / internvl2 patch embeddings) are
+STUBS by assignment: ``input_specs`` supplies precomputed embeddings that are
+prepended to the token embedding sequence.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks
+from repro.models.layers import (
+    ParamDef,
+    ashard,
+    axes_tree,
+    init_tree,
+    rms_norm,
+    shape_tree,
+    softcap,
+)
+
+
+def _superblock_defs(cfg: ModelConfig) -> list:
+    return [blocks.block_defs(cfg, kind) for kind in cfg.pattern]
+
+
+# logical param axes that map to the model (TP) mesh axis; everything else
+# (fsdp-sharded dims) is gathered at use time.
+_MODEL_AXES = {"heads", "kv_heads", "mlp", "experts", "rnn", "vocab"}
+
+
+def _gather_fsdp(params, defs, tp: bool = True):
+    """FSDP weight gathering: re-constrain used weights so only their
+    model/TP axes stay sharded.  Without this GSPMD contracts matmuls over
+    the fsdp-sharded dim and all-reduces full activations every layer
+    (measured 80GB/step/device on internlm2 — EXPERIMENTS.md §Perf it. 0).
+    Runs inside the remat'd superblock, so backward re-gathers (standard
+    FSDP+remat schedule).  tp=False gathers everything (tp_mode="dp")."""
+    from repro.models.layers import _ACTIVATION_MESH
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = _ACTIVATION_MESH
+    if mesh is None:
+        return params
+
+    def one(p, d):
+        parts = [
+            "model"
+            if (tp and a in _MODEL_AXES and dim % mesh.shape["model"] == 0)
+            else None
+            for a, dim in zip(d.axes, d.shape)
+        ]
+        # a mesh axis may appear at most once
+        seen = False
+        for i, x in enumerate(parts):
+            if x == "model":
+                if seen:
+                    parts[i] = None
+                seen = True
+        return jax.lax.with_sharding_constraint(p, NamedSharding(mesh, P(*parts)))
+
+    return jax.tree_util.tree_map(
+        one, params, defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+
+
+def model_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    defs: dict = {
+        "embed": ParamDef((cfg.vocab_size, d), ("vocab", "embed")),
+        "final_norm": ParamDef((d,), (None,), init="zeros"),
+    }
+    if cfg.n_rep:
+        # stacked along a leading n_rep axis for lax.scan
+        defs["blocks"] = jax.tree_util.tree_map(
+            lambda p: ParamDef((cfg.n_rep,) + p.shape, ("layers",) + p.axes, p.init, p.scale),
+            _superblock_defs(cfg),
+            is_leaf=lambda x: isinstance(x, ParamDef),
+        )
+    tail_kinds = cfg.layer_kinds()[cfg.n_rep * len(cfg.pattern) :]
+    if tail_kinds:
+        defs["tail"] = [blocks.block_defs(cfg, k) for k in tail_kinds]
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef((d, cfg.vocab_size), ("embed", "vocab"))
+    if cfg.frontend != "none":
+        defs["frontend_proj"] = ParamDef((d, d), ("embed", None))
+    return defs
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    return init_tree(key, model_defs(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    return shape_tree(model_defs(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def param_logical_axes(cfg: ModelConfig) -> dict:
+    return axes_tree(model_defs(cfg))
+
+
+def _embed(params, cfg: ModelConfig, tokens: jax.Array, frontend_emb) -> jax.Array:
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    if cfg.emb_scale:
+        x = x * jnp.sqrt(jnp.array(cfg.d_model, jnp.float32)).astype(x.dtype)
+    if cfg.frontend != "none" and frontend_emb is not None:
+        fe = jnp.einsum("bsd,de->bse", frontend_emb.astype(x.dtype), params["frontend_proj"])
+        x = jnp.concatenate([fe, x], axis=1)
+    return ashard(x, "batch", None, None)
+
+
+def forward_hidden(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S)
+    frontend_emb: Optional[jax.Array] = None,  # (B, F, D) for audio/vlm stubs
+) -> Tuple[jax.Array, jax.Array]:
+    """Decoder trunk. Returns (final-normed hidden (B, S_total, D), aux)."""
+    x = _embed(params, cfg, tokens, frontend_emb)
+    positions = jnp.arange(x.shape[1])[None, :]
+    aux_total = jnp.zeros((), jnp.float32)
+
+    sb_defs = _superblock_defs(cfg)
+
+    def superblock(x, rep_params):
+        # barrier: stops XLA hoisting per-step dtype converts of the saved
+        # carry OUT of the backward loop (materializes the whole (n_rep, B,
+        # S, D) history in f32 otherwise — measured 12.9GB/device on
+        # internlm2; EXPERIMENTS.md §Perf iteration 0).
+        x = jax.lax.optimization_barrier(x)
+        rep_params = _gather_fsdp(rep_params, sb_defs, tp=cfg.tp_mode != "dp")
+        aux = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(cfg.pattern):
+            x, a = blocks.block_train(rep_params[i], cfg, kind, x, positions)
+            x = ashard(x, "batch", None, None)
+            aux = aux + a
+        return x, aux
+
+    if cfg.remat == "full":
+        superblock = jax.checkpoint(superblock, policy=jax.checkpoint_policies.nothing_saveable)
+    elif cfg.remat == "dots":
+        # save matmul outputs: backward skips recomputing the flop/traffic
+        # heavy dots (incl. their TP all-reduces) at the cost of storing
+        # per-layer dot outputs (§Perf gemma-7b it.3)
+        superblock = jax.checkpoint(
+            superblock, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+
+    if cfg.n_rep and "blocks" in params:
+        def scan_body(x, rep_params):
+            return superblock(x, rep_params)
+
+        x, auxs = jax.lax.scan(scan_body, x, params["blocks"])
+        aux_total = aux_total + jnp.sum(auxs)
+    tail_kinds = cfg.layer_kinds()[cfg.n_rep * len(cfg.pattern) :]
+    for i, kind in enumerate(tail_kinds):
+        tparams = _gather_fsdp(
+            params["tail"][i], blocks.block_defs(cfg, kind), tp=cfg.tp_mode != "dp"
+        )
+        x, a = blocks.block_train(tparams, cfg, kind, x, positions)
+        aux_total = aux_total + a
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux_total
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    frontend_emb: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full forward with logits (prefill/decode-scale shapes only —
+    training uses loss_fn's chunked CE so (B,S,V) never materializes)."""
+    x, aux_total = forward_hidden(params, cfg, tokens, frontend_emb)
+    head = params["head"] if not cfg.tie_embeddings else params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    logits = ashard(softcap(logits, cfg.logit_softcap), "batch", None, "model")
+    return logits, aux_total
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Decode cache pytree, stacked to mirror the params layout."""
+    dtype = jnp.dtype(cfg.dtype)
+    cache: dict = {}
+    if cfg.n_rep:
+        per_rep = [
+            blocks.block_cache_init(cfg, kind, batch, max_len, dtype) for kind in cfg.pattern
+        ]
+        # stack n_rep copies along a leading scan axis
+        cache["blocks"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_rep,) + x.shape), per_rep
+        )
+    tail_kinds = cfg.layer_kinds()[cfg.n_rep * len(cfg.pattern) :]
+    if tail_kinds:
+        cache["tail"] = [
+            blocks.block_cache_init(cfg, k, batch, max_len, dtype) for k in tail_kinds
+        ]
+    cache["index"] = jnp.zeros((), jnp.int32)
+    return cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def decode_step(
+    params: dict, cfg: ModelConfig, tokens: jax.Array, cache: dict
+) -> Tuple[jax.Array, dict]:
+    """One-token decode. tokens: (B, 1). Returns (logits (B, 1, V), cache)."""
+    x = _embed(params, cfg, tokens, None)
+    index = cache["index"]
+
+    if cfg.n_rep and "blocks" in params:
+        def scan_body(x, xs):
+            rep_params, rep_cache = xs
+            new_cache = []
+            for i, kind in enumerate(cfg.pattern):
+                x, c = blocks.block_decode(rep_params[i], cfg, kind, x, rep_cache[i], index)
+                new_cache.append(c)
+            return x, new_cache
+
+        x, new_blocks = jax.lax.scan(scan_body, x, (params["blocks"], cache["blocks"]))
+        cache = dict(cache, blocks=new_blocks)
+    tail_kinds = cfg.layer_kinds()[cfg.n_rep * len(cfg.pattern) :]
+    if tail_kinds:
+        new_tail = []
+        for i, kind in enumerate(tail_kinds):
+            x, c = blocks.block_decode(params["tail"][i], cfg, kind, x, cache["tail"][i], index)
+            new_tail.append(c)
+        cache = dict(cache, tail=new_tail)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["head"] if not cfg.tie_embeddings else params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    logits = softcap(logits, cfg.logit_softcap)
+    cache = dict(cache, index=index + 1)
+    return logits, cache
+
+
+def loss_fn(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S) inputs
+    labels: jax.Array,  # (B, S) targets (-100 = masked)
+    frontend_emb: Optional[jax.Array] = None,
+    aux_weight: float = 0.01,
+    loss_chunk: int | None = None,
+) -> jax.Array:
+    """Cross entropy with *chunked* logits: the (B, S, V) tensor never
+    materializes (at vocab 262k × 1M tokens it would be ~4GB f32 per device
+    plus its cotangent — EXPERIMENTS.md §Perf iteration 0).  Each sequence
+    chunk computes logits → logsumexp → NLL under remat."""
+    x, aux = forward_hidden(params, cfg, tokens, frontend_emb)
+    if cfg.frontend != "none" and frontend_emb is not None:
+        x = x[:, frontend_emb.shape[1] :]
+    head = params["head"] if not cfg.tie_embeddings else params["embed"].T
+    head = head.astype(x.dtype)
+    # gather the head's fsdp (embed) dim; keep vocab sharded on model
+    head = ashard(head, None, "model")
+    b, s, d = x.shape
+    from repro.models.attention import pick_chunk
+
+    c = pick_chunk(s, loss_chunk or cfg.loss_chunk)
+    nc = s // c
+    xs = x.reshape(b, nc, c, d).swapaxes(0, 1)  # (nc, B, c, D)
+    ls = labels.reshape(b, nc, c).swapaxes(0, 1)
+
+    def chunk_nll(carry, xs_):
+        xc, lc = xs_
+        logits = jnp.einsum("bcd,dv->bcv", xc, head, preferred_element_type=jnp.float32)
+        logits = softcap(logits, cfg.logit_softcap)
+        mask = lc >= 0
+        safe = jnp.maximum(lc, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll, cnt = carry
+        return (nll + jnp.sum((logz - gold) * mask), cnt + jnp.sum(mask)), None
+
+    body = jax.checkpoint(chunk_nll, policy=jax.checkpoint_policies.nothing_saveable)
+    (nll, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (xs, ls))
+    return nll / jnp.maximum(cnt, 1) + aux_weight * aux

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts with sort-based capacity dispatch (EP over `model`).
+
+Dispatch layout (DESIGN.md §5): tokens stay sharded over the fsdp axes as
+groups ``G`` (= batch rows); experts shard over ``model``.  Every device
+already holds (its token groups × its expert shard), so dispatch is a *local
+gather* and combine a *local scatter-add* — no all-to-all, no (T, E, C)
+one-hot monsters (the einsum dispatch used in early Switch implementations
+materializes O(T·E·C) — measured 415GB/device on arctic-480b; EXPERIMENTS.md
+§Perf iteration 0).  Per-(group, expert) capacity drops overflow tokens.
+
+Router modes:
+  - ``topk``    — deterministic top-k (standard).
+  - ``sampled`` — C-SAW integration (DESIGN.md §4): experts sampled *without
+    replacement* with router probabilities as biases (Gumbel top-k — the
+    paper's selection semantics; exploration-friendly routing).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ACTIVATIONS, ParamDef, ashard
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    defs = {
+        "router": ParamDef((d, e), ("embed", None)),
+        "wi": ParamDef((e, d, f), ("experts", "embed", "mlp")),
+        "wo": ParamDef((e, f, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.glu:
+        defs["wg"] = ParamDef((e, d, f), ("experts", "embed", "mlp"))
+    return defs
+
+
+def _route(params, cfg: ModelConfig, x: jax.Array, rng: jax.Array | None):
+    """x: (..., D). Returns (gates, idx, probs) with (..., k) leading dims."""
+    logits = jnp.einsum("...d,de->...e", x, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    k = cfg.num_experts_per_tok
+    if cfg.router_mode == "sampled" and rng is not None:
+        # C-SAW: weighted sampling without replacement, biases = router probs.
+        g = jax.random.gumbel(rng, probs.shape, dtype=jnp.float32)
+        keys_ = jnp.log(jnp.maximum(probs, 1e-20)) + g
+        _, idx = jax.lax.top_k(keys_, k)
+        gates = jnp.take_along_axis(probs, idx, axis=-1)
+    else:
+        gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def moe_apply(
+    params: dict, cfg: ModelConfig, x: jax.Array, rng: jax.Array | None = None
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss). Groups = batch rows (B stays sharded)."""
+    g_dim, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    tk = s * k
+    capacity = max(int(s * k / e * cfg.capacity_factor), 4)
+
+    gates, idx, probs = _route(params, cfg, x, rng)  # (G, S, k)
+
+    # ---- sort-based dispatch plan, per group --------------------------------
+    flat_e = idx.reshape(g_dim, tk)  # expert of each (token, choice)
+    flat_tok = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)[None, :]
+    flat_gate = gates.reshape(g_dim, tk)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    sorted_tok = jnp.take_along_axis(jnp.broadcast_to(flat_tok, (g_dim, tk)), order, axis=-1)
+    sorted_gate = jnp.take_along_axis(flat_gate, order, axis=-1)
+    # rank within expert segment: arange - running start-of-segment
+    ar = jnp.arange(tk, dtype=jnp.int32)[None, :]
+    is_start = jnp.concatenate(
+        [jnp.ones((g_dim, 1), bool), sorted_e[:, 1:] != sorted_e[:, :-1]], axis=-1
+    )
+    run_start = jax.lax.cummax(jnp.where(is_start, ar, 0), axis=1)
+    rank = ar - run_start
+    keep = rank < capacity
+    slot = jnp.where(keep, rank, capacity)  # capacity = out-of-bounds -> drop
+
+    garange = jnp.arange(g_dim)[:, None]
+    grid_tok = jnp.full((g_dim, e, capacity), s, jnp.int32)  # s = dummy row
+    grid_tok = grid_tok.at[garange, sorted_e, slot].set(sorted_tok, mode="drop")
+    grid_gate = jnp.zeros((g_dim, e, capacity), jnp.float32)
+    grid_gate = grid_gate.at[garange, sorted_e, slot].set(sorted_gate, mode="drop")
+
+    # ---- expert compute (fully local in the (data, model) grid) -------------
+    xp = ashard(
+        jnp.concatenate([x, jnp.zeros((g_dim, 1, d), x.dtype)], axis=1),
+        "batch", None, None,
+    )  # dummy row at index s
+    expert_in = jnp.take_along_axis(
+        xp[:, :, None, :], grid_tok.reshape(g_dim, -1)[:, :, None, None], axis=1
+    ).reshape(g_dim, e, capacity, d)
+    expert_in = ashard(expert_in, "batch", "model", None, None)
+    act = ACTIVATIONS[cfg.activation]
+    h = ashard(jnp.einsum("gecd,edf->gecf", expert_in, params["wi"]), "batch", "model", None, None)
+    if cfg.glu:
+        gg = ashard(jnp.einsum("gecd,edf->gecf", expert_in, params["wg"]), "batch", "model", None, None)
+        h = act(gg) * h
+    else:
+        h = act(h)
+    expert_out = ashard(jnp.einsum("gecf,efd->gecd", h, params["wo"]), "batch", "model", None, None)
+    expert_out = (expert_out * grid_gate[..., None]).astype(x.dtype)
+
+    # ---- combine: scatter-add back to token rows (bf16, sharded acc) --------
+    y = ashard(jnp.zeros((g_dim, s + 1, d), x.dtype), "batch", None, None)
+    y = y.at[garange[:, :, None], grid_tok, :].add(expert_out, mode="drop")[:, :s]
+    y = ashard(y, "batch", None, None)
+
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    ce = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(me * ce) * e
+    return y.astype(x.dtype), aux

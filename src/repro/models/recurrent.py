@@ -1,0 +1,361 @@
+"""Recurrent blocks: RG-LRU (Griffin / RecurrentGemma) and xLSTM (mLSTM, sLSTM).
+
+Time-parallel forms are used wherever they exist:
+  - RG-LRU: ``jax.lax.associative_scan`` over (a, b) affine pairs.
+  - mLSTM: blocked quadratic form with cumulative log-forget bias and an
+    online max-stabilizer (same blocking scheme as attention — exact FLOPs,
+    bounded transients; the TPU answer to the paper's chunkwise kernels).
+  - sLSTM: true hidden-to-hidden nonlinearity → honest sequential
+    ``lax.scan`` over time (no parallel form exists; noted in DESIGN.md).
+
+Each block also provides a single-token decode step carrying O(1) state —
+this is what makes ``long_500k`` cells feasible for ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDef, ashard, causal_conv1d, model_divides, rp_einsum
+
+NEG_INF = -1e30
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin)
+# ---------------------------------------------------------------------------
+
+
+def rglru_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    k = cfg.conv1d_width
+    return {
+        "wx": ParamDef((d, w), ("embed", "rnn")),
+        "wgate": ParamDef((d, w), ("embed", "rnn")),
+        "conv_w": ParamDef((w, k), ("rnn", None), scale=0.5),
+        "wa": ParamDef((w, w), ("rnn", None)),
+        "ba": ParamDef((w,), (None,), init="zeros"),
+        "wi": ParamDef((w, w), ("rnn", None)),
+        "bi": ParamDef((w,), (None,), init="zeros"),
+        "lam": ParamDef((w,), (None,), init="lru_lambda"),
+        "wout": ParamDef((w, d), ("rnn", "embed")),
+    }
+
+
+def _rglru_gates(params, u):
+    c = 8.0
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u, params["wa"]) + params["ba"])
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u, params["wi"]) + params["bi"])
+    log_a = -c * jax.nn.softplus(params["lam"]).astype(jnp.float32) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i.astype(jnp.float32) * u.astype(jnp.float32))
+    return a, b
+
+
+def rglru_train(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    gate = jax.nn.gelu(ashard(jnp.einsum("bsd,dw->bsw", x, params["wgate"]), "batch", None, "model"))
+    u = ashard(jnp.einsum("bsd,dw->bsw", x, params["wx"]), "batch", None, "model")
+    u, _ = causal_conv1d(u, params["conv_w"])
+    a, b = _rglru_gates(params, u)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(x.dtype)
+    return rp_einsum("bsw,wd->bsd", gate * h, params["wout"], cfg.reduce_dtype)
+
+
+def rglru_decode(
+    params: dict, cfg: ModelConfig, x: jax.Array, state: dict
+) -> Tuple[jax.Array, dict]:
+    """x: (B, 1, D); state: {'h': (B, W) f32, 'conv': (B, K-1, W)}."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["wgate"]))
+    u = jnp.einsum("bsd,dw->bsw", x, params["wx"])
+    u, conv_state = causal_conv1d(u, params["conv_w"], state["conv"])
+    a, b = _rglru_gates(params, u)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = gate * h[:, None].astype(x.dtype)
+    return jnp.einsum("bsw,wd->bsd", y, params["wout"]), {"h": h, "conv": conv_state}
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    p = int(d * cfg.mlstm_proj_factor)
+    k = cfg.conv1d_width
+    return {
+        "wup": ParamDef((d, p), ("embed", "mlp")),
+        "wz": ParamDef((d, p), ("embed", "mlp")),
+        "conv_w": ParamDef((p, k), ("mlp", None), scale=0.5),
+        "wq": ParamDef((p, p), ("mlp", None)),
+        "wk": ParamDef((p, p), ("mlp", None)),
+        "wv": ParamDef((p, p), ("mlp", None)),
+        "wif": ParamDef((p, 2 * cfg.num_heads), ("mlp", None), scale=0.1),
+        "bif": ParamDef((2 * cfg.num_heads,), (None,), init="zeros"),
+        "skip": ParamDef((p,), (None,), init="ones"),
+        "wdown": ParamDef((p, d), ("mlp", "embed")),
+    }
+
+
+def _mlstm_qkv_gates(params, cfg, x):
+    h = cfg.num_heads
+    u = ashard(jnp.einsum("bsd,dp->bsp", x, params["wup"]), "batch", None, "model")
+    z = ashard(jnp.einsum("bsd,dp->bsp", x, params["wz"]), "batch", None, "model")
+    uc, _ = causal_conv1d(u, params["conv_w"])
+    uc = jax.nn.silu(uc)
+    q = jnp.einsum("bsp,pr->bsr", uc, params["wq"])
+    k = jnp.einsum("bsp,pr->bsr", uc, params["wk"])
+    v = jnp.einsum("bsp,pr->bsr", u, params["wv"])
+    gif = jnp.einsum("bsp,pg->bsg", uc, params["wif"]) + params["bif"]
+    ig, fg = gif[..., :h].astype(jnp.float32), gif[..., h:].astype(jnp.float32)
+    b, s, p = q.shape
+    hd = p // h
+    shp = (b, s, h, hd)
+    return q.reshape(shp), k.reshape(shp), v.reshape(shp), ig, fg, z, uc
+
+
+def mlstm_train(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Blocked parallel mLSTM. x: (B, S, D)."""
+    q, k, v, ig, fg, z, uc = _mlstm_qkv_gates(params, cfg, x)
+    b, s, h, hd = q.shape
+    scale = hd**-0.5
+    logf = jax.nn.log_sigmoid(fg)  # (B,S,H)
+    big_f = jnp.cumsum(logf, axis=1)  # F_t = sum_{tau<=t} log f
+    from repro.models.attention import pick_chunk
+
+    c = pick_chunk(s, cfg.attn_chunk)
+    n = s // c
+    qg = q.reshape(b, n, c, h, hd)
+    kg = k.reshape(b, n, c, h, hd)
+    vg = v.reshape(b, n, c, h, hd)
+    fq = big_f.reshape(b, n, c, h)
+    fk = big_f.reshape(b, n, c, h)
+    iq = ig.reshape(b, n, c, h)
+    # xLSTM head counts (4) rarely divide the model axis: shard the q-chunk
+    # dim of the quadratic form instead (sequence-block parallelism).
+    heads_ok = model_divides(h)
+    if heads_ok:
+        shd_q = lambda t: ashard(t, "batch", None, "model", None)
+        shd_s = lambda t: ashard(t, "batch", "model", None)
+        shd_a = lambda t: ashard(t, "batch", "model", None, None)
+    else:
+        shd_q = lambda t: ashard(t, "batch", "model", None, None)
+        shd_s = lambda t: ashard(t, "batch", None, "model")
+        shd_a = lambda t: ashard(t, "batch", None, "model", None)
+
+    outs = []
+    for qi in range(n):
+        m0 = shd_s(jnp.full((b, h, c), NEG_INF, jnp.float32))
+        num0 = shd_a(jnp.zeros((b, h, c, hd), jnp.float32))
+        den0 = shd_s(jnp.zeros((b, h, c), jnp.float32))
+        q_blk, fq_blk = shd_q(qg[:, qi]), fq[:, qi]
+        q_idx = qi * c + jnp.arange(c)
+
+        def step(carry, xs):
+            m, num, den = carry
+            kc, vc, fkc, ikc, koff = xs
+            # decay bias D_ij = F_i - F_j + i_j  (j <= i)
+            dmat = (
+                fq_blk.transpose(0, 2, 1)[..., :, None]
+                - fkc.transpose(0, 2, 1)[..., None, :]
+                + ikc.transpose(0, 2, 1)[..., None, :]
+            )  # (B,H,Cq,Ckv)
+            k_idx = koff + jnp.arange(c)
+            msk = k_idx[None, :] <= q_idx[:, None]
+            dmat = jnp.where(msk[None, None], dmat, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(dmat, axis=-1))
+            w = jnp.exp(dmat - m_new[..., None])
+            s_qk = jnp.einsum(
+                "bqhd,bchd->bhqc", q_blk, kc, preferred_element_type=jnp.float32
+            ) * scale
+            sw = s_qk * w
+            corr = jnp.exp(m - m_new)
+            num = num * corr[..., None] + jnp.einsum(
+                "bhqc,bchd->bhqd", sw.astype(vc.dtype), vc, preferred_element_type=jnp.float32
+            )
+            den = den * corr + jnp.sum(sw, axis=-1)
+            return (m_new, num, den), None
+
+        koffs = jnp.arange(qi + 1) * c
+        (m, num, den), _ = jax.lax.scan(
+            step,
+            (m0, num0, den0),
+            (
+                kg[:, : qi + 1].swapaxes(0, 1),
+                vg[:, : qi + 1].swapaxes(0, 1),
+                fk[:, : qi + 1].swapaxes(0, 1),
+                iq[:, : qi + 1].swapaxes(0, 1),
+                koffs,
+            ),
+        )
+        hout = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+        outs.append(hout.transpose(0, 2, 1, 3))  # (B,C,H,hd)
+    y = jnp.concatenate(outs, axis=1).reshape(b, s, h * hd).astype(x.dtype)
+    y = y + params["skip"] * uc
+    y = y * jax.nn.silu(z)
+    return rp_einsum("bsp,pd->bsd", y, params["wdown"], cfg.reduce_dtype)
+
+
+def mlstm_decode(params, cfg: ModelConfig, x: jax.Array, state: dict) -> Tuple[jax.Array, dict]:
+    """x: (B,1,D); state: {'C': (B,H,hd,hd), 'n': (B,H,hd), 'm': (B,H), 'conv': ...}."""
+    hn = cfg.num_heads
+    u = jnp.einsum("bsd,dp->bsp", x, params["wup"])
+    z = jnp.einsum("bsd,dp->bsp", x, params["wz"])
+    uc, conv_state = causal_conv1d(u, params["conv_w"], state["conv"])
+    uc = jax.nn.silu(uc)
+    q = jnp.einsum("bsp,pr->bsr", uc, params["wq"])
+    k = jnp.einsum("bsp,pr->bsr", uc, params["wk"])
+    v = jnp.einsum("bsp,pr->bsr", u, params["wv"])
+    gif = jnp.einsum("bsp,pg->bsg", uc, params["wif"]) + params["bif"]
+    ig, fg = gif[..., :hn].astype(jnp.float32), gif[..., hn:].astype(jnp.float32)
+    b = x.shape[0]
+    hd = q.shape[-1] // hn
+    q, k, v = (t.reshape(b, hn, hd) for t in (q[:, 0], k[:, 0], v[:, 0]))
+    scale = hd**-0.5
+    logf = jax.nn.log_sigmoid(fg[:, 0])  # (B,H)
+    m_new = jnp.maximum(logf + state["m"], ig[:, 0])
+    f_s = jnp.exp(logf + state["m"] - m_new)
+    i_s = jnp.exp(ig[:, 0] - m_new)
+    kf = k.astype(jnp.float32) * scale
+    cmat = f_s[..., None, None] * state["C"] + i_s[..., None, None] * (
+        vf := v.astype(jnp.float32)
+    )[..., :, None] * kf[..., None, :]
+    nvec = f_s[..., None] * state["n"] + i_s[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhvk,bhk->bhv", cmat, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", nvec, qf)), jnp.exp(-m_new))
+    hout = (num / den[..., None]).reshape(b, 1, hn * hd).astype(x.dtype)
+    y = hout + params["skip"] * uc
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bsp,pd->bsd", y, params["wdown"]), {
+        "C": cmat, "n": nvec, "m": m_new, "conv": conv_state,
+    }
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    p = int(cfg.d_model * cfg.mlstm_proj_factor)
+    h = cfg.num_heads
+    hd = p // h
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e9, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, p), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory block) — sequential by construction
+# ---------------------------------------------------------------------------
+
+
+def slstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    up = int(d * cfg.slstm_proj_factor)
+    return {
+        "wx": ParamDef((d, 4 * d), ("embed", "mlp"), scale=0.5),
+        "bx": ParamDef((4 * d,), (None,), init="zeros"),
+        "r": ParamDef((h, hd, 4 * hd), (None, None, None), scale=0.5),
+        "wup": ParamDef((d, up), ("embed", "mlp")),
+        "wgate": ParamDef((d, up), ("embed", "mlp")),
+        "wdown": ParamDef((up, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_cell(params, cfg, xt, state):
+    """One sLSTM step. xt: (B, 4D) pre-activations; state dicts are f32."""
+    h, c, n, m = state["h"], state["c"], state["n"], state["m"]
+    b = xt.shape[0]
+    nh = cfg.num_heads
+    hd = cfg.d_model // nh
+    # recurrent contribution (block-diagonal per head); bf16 reduce_dtype
+    # halves the per-step dR partial-sum all-reduce under pure DP
+    # (EXPERIMENTS.md §Perf xlstm it.4)
+    rec = rp_einsum(
+        "bhk,hkg->bhg",
+        h.reshape(b, nh, hd).astype(jnp.bfloat16 if cfg.reduce_dtype == "bf16" else h.dtype),
+        params["r"].astype(jnp.bfloat16 if cfg.reduce_dtype == "bf16" else params["r"].dtype),
+        cfg.reduce_dtype,
+    ).reshape(b, 4 * cfg.d_model)
+    z, i, f, o = jnp.split(xt.astype(jnp.float32) + rec.astype(jnp.float32), 4, axis=-1)
+    m_new = jnp.maximum(f + m, i)  # exponential i, sigmoid-exp f stabilizer
+    i_s = jnp.exp(i - m_new)
+    f_s = jnp.exp(f + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(z)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(o) * (c_new / jnp.maximum(n_new, 1e-6))
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+SLSTM_TIME_CHUNK = 32
+
+
+def slstm_train(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    b, s, d = x.shape
+    xa = jnp.einsum("bsd,dg->bsg", x, params["wx"]) + params["bx"]
+    state = slstm_init_state(cfg, b, x.dtype)
+
+    # time-CHUNKED scan with an unrolled inner loop: the recurrent matrix
+    # R is reused every step, and grad-of-scan makes GSPMD all-reduce dR
+    # once per scan iteration (measured 12k × 4.3MB ARs = 53GB/step on
+    # xlstm; EXPERIMENTS.md §Perf xlstm it.3).  Unrolling ``tc`` steps per
+    # iteration accumulates dR locally and cuts that traffic by tc×.
+    tc = SLSTM_TIME_CHUNK
+    while s % tc:
+        tc //= 2
+    nch = s // tc
+
+    def chunk(state, xc):  # xc: (tc, B, 4D)
+        hs = []
+        for t in range(tc):
+            state = _slstm_cell(params, cfg, xc[t], state)
+            hs.append(state["h"])
+        return state, jnp.stack(hs)
+
+    _, hs = jax.lax.scan(chunk, state, xa.swapaxes(0, 1).reshape(nch, tc, b, 4 * d))
+    hs = hs.reshape(s, b, d).swapaxes(0, 1).astype(x.dtype)  # (B,S,D)
+    # post up/gate/down MLP (xLSTM pf 4/3)
+    up = jnp.einsum("bsd,du->bsu", hs, params["wup"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,du->bsu", hs, params["wgate"]))
+    return jnp.einsum("bsu,ud->bsd", up * gate, params["wdown"])
+
+
+def slstm_decode(params, cfg: ModelConfig, x: jax.Array, state: dict) -> Tuple[jax.Array, dict]:
+    xa = jnp.einsum("bsd,dg->bsg", x, params["wx"]) + params["bx"]
+    new = _slstm_cell(params, cfg, xa[:, 0], state)
+    hs = new["h"][:, None].astype(x.dtype)
+    up = jnp.einsum("bsd,du->bsu", hs, params["wup"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,du->bsu", hs, params["wgate"]))
+    return jnp.einsum("bsu,ud->bsd", up * gate, params["wdown"]), new
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32) * 1e-6,
+        "m": jnp.zeros((batch, d), jnp.float32),
+    }

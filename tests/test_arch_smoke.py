@@ -1,0 +1,90 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family config,
+one forward + one train step + one decode step on CPU; shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import decode_step, forward, init_cache, init_params, loss_fn
+from repro.train.optimizer import OptConfig, opt_init, opt_update
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(KEY, cfg)
+    b, s = 2, 32
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    fe = (jax.random.normal(KEY, (b, cfg.frontend_tokens, cfg.d_model))
+          if cfg.frontend != "none" else None)
+    logits, aux = forward(params, cfg, toks, fe)
+    total = s + (cfg.frontend_tokens if cfg.frontend != "none" else 0)
+    assert logits.shape == (b, total, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_finite(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(KEY, cfg)
+    ocfg = OptConfig(kind="adamw", lr=1e-3, warmup_steps=1)
+    opt_state = opt_init(ocfg, params)
+    toks = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    fe = (jax.random.normal(KEY, (2, cfg.frontend_tokens, cfg.d_model))
+          if cfg.frontend != "none" else None)
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, toks, toks, fe)
+    )(params)
+    assert np.isfinite(float(loss))
+    new_params, _, gnorm = opt_update(ocfg, grads, opt_state, params, jnp.zeros((), jnp.int32))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+    for leaf in jax.tree_util.tree_leaves(new_params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step_finite(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(KEY, cfg)
+    cache = init_cache(cfg, 2, 64)
+    toks = jax.random.randint(KEY, (2, 1), 0, cfg.vocab_size)
+    lg1, cache = decode_step(params, cfg, toks, cache)
+    lg2, cache = decode_step(params, cfg, toks, cache)
+    assert lg2.shape == (2, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg2)).all()
+    assert int(cache["index"]) == 2
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_sane(arch):
+    """The exact assigned configs: structural invariants only (no alloc)."""
+    cfg = get_config(arch)
+    assert cfg.num_heads % cfg.num_kv_heads == 0
+    assert len(cfg.layer_kinds()) == cfg.num_layers
+    assert cfg.n_rep * len(cfg.pattern) + cfg.n_tail == cfg.num_layers
+    n = cfg.param_count()
+    assert n > 1e8, f"{arch}: implausibly small param count {n}"
+    if cfg.num_experts:
+        assert cfg.active_param_count() < n
+
+
+def test_assigned_param_counts():
+    """Named sizes land near the assignment (approximate formulas)."""
+    expect = {
+        "xlstm_350m": (0.2e9, 0.5e9),
+        "gemma3_1b": (0.8e9, 1.3e9),
+        "internlm2_1_8b": (1.5e9, 2.2e9),
+        "gemma_7b": (7.5e9, 9.5e9),
+        "starcoder2_3b": (2.6e9, 3.5e9),
+        "recurrentgemma_9b": (8e9, 11e9),
+        "arctic_480b": (430e9, 520e9),
+        "llama4_maverick_400b_a17b": (360e9, 440e9),
+        "musicgen_medium": (1.0e9, 1.8e9),
+        "internvl2_26b": (17e9, 27e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"

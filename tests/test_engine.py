@@ -1,0 +1,168 @@
+"""Sampling engines: walks, traversal sampling, algorithm zoo semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core.engine import random_walk, traversal_sample
+from repro.graph import powerlaw_graph, erdos_renyi_graph
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return powerlaw_graph(256, seed=1, weighted=True)
+
+
+def edges_set(g):
+    ip, ind = np.asarray(g.indptr), np.asarray(g.indices)
+    return {(a, b) for a in range(len(ip) - 1) for b in ind[ip[a] : ip[a + 1]]}
+
+
+@pytest.fixture(scope="module")
+def graph_edges(graph):
+    return edges_set(graph)
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestRandomWalk:
+    @pytest.mark.parametrize("name", ["deepwalk", "biased_rw", "weighted_rw", "node2vec"])
+    def test_walk_edges_exist(self, graph, graph_edges, name):
+        spec = alg.ALGORITHMS[name]()
+        seeds = jax.random.randint(KEY, (48,), 0, graph.num_vertices)
+        res = random_walk(graph, seeds, KEY, depth=12, spec=spec, max_degree=graph.max_degree())
+        walks = np.asarray(res.walks)
+        assert walks.shape == (48, 13)
+        for row in walks:
+            for a, b in zip(row[:-1], row[1:]):
+                if a < 0 or b < 0:
+                    break
+                assert (a, b) in graph_edges
+
+    def test_mhrw_stays_or_moves(self, graph, graph_edges):
+        spec = alg.metropolis_hastings_walk()
+        seeds = jax.random.randint(KEY, (48,), 0, graph.num_vertices)
+        res = random_walk(graph, seeds, KEY, depth=12, spec=spec, max_degree=graph.max_degree())
+        for row in np.asarray(res.walks):
+            for a, b in zip(row[:-1], row[1:]):
+                if a < 0 or b < 0:
+                    break
+                assert a == b or (a, b) in graph_edges
+
+    def test_restart_returns_home(self, graph):
+        spec = alg.random_walk_with_restart(1.0, home=7)
+        seeds = jnp.full((8,), 3, jnp.int32)
+        res = random_walk(graph, seeds, KEY, depth=5, spec=spec, max_degree=graph.max_degree())
+        walks = np.asarray(res.walks)
+        alive = walks[:, 1:][walks[:, 1:] >= 0]
+        assert (alive == 7).all()
+
+    def test_jump_changes_distribution(self, graph):
+        spec = alg.random_walk_with_jump(1.0, graph.num_vertices)
+        seeds = jnp.zeros((64,), jnp.int32)
+        res = random_walk(graph, seeds, KEY, depth=10, spec=spec, max_degree=graph.max_degree())
+        # jumps can land anywhere, including non-neighbors
+        walks = np.asarray(res.walks)
+        assert len(np.unique(walks[:, 1])) > 10
+
+    def test_biased_walk_prefers_high_degree(self, graph):
+        deg = np.asarray(graph.indptr[1:] - graph.indptr[:-1])
+        seeds = jax.random.randint(KEY, (512,), 0, graph.num_vertices)
+        unb = random_walk(graph, seeds, KEY, depth=20, spec=alg.deepwalk(), max_degree=graph.max_degree())
+        bia = random_walk(graph, seeds, KEY, depth=20, spec=alg.biased_random_walk(), max_degree=graph.max_degree())
+        mean_deg = lambda w: deg[np.asarray(w.walks)[:, 1:].clip(0)].mean()
+        assert mean_deg(bia) > mean_deg(unb)
+
+    def test_deepwalk_stationary_distribution(self, graph):
+        """Simple RW on undirected graph: stationary dist ∝ degree."""
+        seeds = jax.random.randint(KEY, (2048,), 0, graph.num_vertices)
+        res = random_walk(graph, seeds, KEY, depth=50, spec=alg.deepwalk(), max_degree=graph.max_degree())
+        last = np.asarray(res.walks)[:, -1]
+        last = last[last >= 0]
+        deg = np.asarray(graph.indptr[1:] - graph.indptr[:-1]).astype(float)
+        visit = np.bincount(last, minlength=graph.num_vertices).astype(float)
+        # correlation between visit frequency and degree should be strong
+        corr = np.corrcoef(visit, deg)[0, 1]
+        assert corr > 0.7, corr
+
+
+class TestTraversalSampling:
+    @pytest.mark.parametrize("name", ["neighbor_biased", "neighbor_unbiased", "forest_fire", "layer", "snowball"])
+    def test_sampled_edges_exist(self, graph, graph_edges, name):
+        spec = alg.ALGORITHMS[name]()
+        pools = jax.random.randint(KEY, (16, 1), 0, graph.num_vertices)
+        res = traversal_sample(graph, pools, KEY, depth=2, spec=spec,
+                               max_degree=graph.max_degree(), pool_capacity=128,
+                               max_vertices=graph.num_vertices)
+        src, dst = np.asarray(res.edges_src), np.asarray(res.edges_dst)
+        n_checked = 0
+        for s_row, d_row in zip(src, dst):
+            for s, d in zip(s_row, d_row):
+                if s >= 0 and d >= 0:
+                    assert (s, d) in graph_edges
+                    n_checked += 1
+        assert n_checked > 0
+
+    def test_without_replacement_within_run(self, graph):
+        """Traversal sampling never samples the same vertex twice."""
+        spec = alg.unbiased_neighbor_sampling(neighbor_size=2, frontier_size=4)
+        pools = jax.random.randint(KEY, (32, 1), 0, graph.num_vertices)
+        res = traversal_sample(graph, pools, KEY, depth=3, spec=spec,
+                               max_degree=graph.max_degree(), pool_capacity=128,
+                               max_vertices=graph.num_vertices)
+        dst = np.asarray(res.edges_dst)
+        for i, row in enumerate(dst):
+            sampled = row[row >= 0]
+            assert len(set(sampled.tolist())) == len(sampled), f"instance {i} resampled a vertex"
+
+    def test_neighbor_size_cap(self, graph):
+        spec = alg.biased_neighbor_sampling(neighbor_size=2, frontier_size=4)
+        pools = jax.random.randint(KEY, (16, 1), 0, graph.num_vertices)
+        res = traversal_sample(graph, pools, KEY, depth=1, spec=spec,
+                               max_degree=graph.max_degree(), pool_capacity=64,
+                               max_vertices=graph.num_vertices)
+        assert int(res.num_edges.max()) <= 4 * 2
+
+    def test_mdrw_pool_invariant(self, graph):
+        """MDRW: pool size stays <= initial (replace semantics, paper Fig 4)."""
+        spec = alg.multi_dimensional_random_walk()
+        pools = jax.random.randint(KEY, (16, 3), 0, graph.num_vertices)
+        res = traversal_sample(graph, pools, KEY, depth=6, spec=spec,
+                               max_degree=graph.max_degree(), pool_capacity=8)
+        sizes = np.asarray((res.frontier_pool >= 0).sum(-1))
+        assert (sizes <= 3).all()
+
+    def test_forest_fire_variable_count(self, graph):
+        spec = alg.forest_fire_sampling(p_f=0.5, max_burn=6)
+        pools = jax.random.randint(KEY, (64, 1), 0, graph.num_vertices)
+        res = traversal_sample(graph, pools, KEY, depth=1, spec=spec,
+                               max_degree=graph.max_degree(), pool_capacity=64,
+                               max_vertices=graph.num_vertices)
+        counts = np.asarray(res.num_edges)
+        assert len(np.unique(counts)) > 1  # geometric burn: variable sizes
+
+
+class TestMultiDevice:
+    def test_instance_parallel_single_device(self, graph):
+        from repro.core.distributed import instance_parallel_walk
+        mesh = jax.make_mesh((1,), ("data",))
+        seeds = jax.random.randint(KEY, (32,), 0, graph.num_vertices)
+        res = instance_parallel_walk(mesh, graph, seeds, KEY, depth=8,
+                                     spec=alg.deepwalk(), max_degree=graph.max_degree())
+        assert res.walks.shape == (32, 9)
+        assert int(res.sampled_edges) > 0
+
+    def test_graph_sharded_single_device(self, graph, graph_edges):
+        from repro.core.distributed import graph_sharded_walk
+        mesh = jax.make_mesh((1,), ("data",))
+        seeds = jax.random.randint(KEY, (16,), 0, graph.num_vertices)
+        walks = graph_sharded_walk(mesh, graph, seeds, KEY, depth=6,
+                                   spec=alg.deepwalk(), max_degree=graph.max_degree())
+        walks = np.asarray(walks)
+        for row in walks:
+            for a, b in zip(row[:-1], row[1:]):
+                if a < 0 or b < 0:
+                    break
+                assert (a, b) in graph_edges
