@@ -1,0 +1,90 @@
+"""Microbenchmark: reference vs Pallas ITS selection → BENCH_select.json.
+
+Times the backend dispatcher's two routes on identical inputs (same counted
+RNG budget, so both compute the same selections) across several
+(instances, pool, k) shapes, and records wall times so the perf trajectory
+is measurable PR-over-PR.  On CPU the Pallas route runs in interpret mode —
+expect it to LOSE there; the number that matters is the ratio on TPU, where
+the kernel fuses CTPS build + search + BRS retry in VMEM.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_select.py [--iters 8]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks.common import timeit  # noqa: E402
+
+from repro.core import backend as bk  # noqa: E402
+
+# (instances, pool size, draws) — frontier-select-like, neighbor-select-like,
+# and a wide-pool layer-sampling shape; pools deliberately not lane-aligned
+# so the dispatcher's padding plumbing is on the timed path.
+SHAPES = [
+    (128, 256, 4),
+    (256, 100, 2),
+    (64, 1000, 8),
+]
+
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_select.json"
+
+
+def bench_shape(i_dim, p, k, max_iters):
+    key = jax.random.PRNGKey(i_dim * p + k)
+    b = jax.random.uniform(key, (i_dim, p))
+
+    def run(backend):
+        @jax.jit
+        def fn(key, b):
+            return bk.select_without_replacement(
+                key, b, None, k, method="its_brs", backend=backend, max_iters=max_iters
+            ).indices
+        return timeit(fn, key, b, warmup=1, iters=3)
+
+    t_ref = run("reference")
+    t_pal = run("pallas")
+    return {
+        "instances": i_dim,
+        "pool": p,
+        "k": k,
+        "max_iters": max_iters,
+        "reference_s": t_ref,
+        "pallas_s": t_pal,
+        "speedup": t_ref / t_pal if t_pal > 0 else None,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=8, help="retry budget (rounds)")
+    args = ap.parse_args()
+
+    rows = []
+    for i_dim, p, k in SHAPES:
+        row = bench_shape(i_dim, p, k, args.iters)
+        rows.append(row)
+        print(
+            f"I={i_dim:5d} P={p:5d} k={k:2d}  "
+            f"reference {row['reference_s']*1e3:8.2f} ms   "
+            f"pallas {row['pallas_s']*1e3:8.2f} ms   "
+            f"speedup {row['speedup']:.2f}x"
+        )
+
+    payload = {
+        "bench": "its_brs selection, reference vs pallas backend",
+        "device": jax.default_backend(),
+        "pallas_interpret": jax.default_backend() != "tpu",
+        "results": rows,
+    }
+    OUT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main()

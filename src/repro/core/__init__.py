@@ -26,6 +26,8 @@ from repro.core.select import (
 )
 from repro.core.engine import SampleResult, WalkResult, random_walk, traversal_sample
 from repro.core import algorithms
+from repro.core import backend
+from repro.core.backend import resolve_backend
 
 __all__ = [
     "EdgeCtx",
@@ -47,4 +49,6 @@ __all__ = [
     "random_walk",
     "traversal_sample",
     "algorithms",
+    "backend",
+    "resolve_backend",
 ]

@@ -25,19 +25,49 @@ from repro.core.api import (
 # ---------------------------------------------------------------------------
 
 
+# flat per-edge biases (CSR order) unlocking the compiled walk fast path;
+# each must agree with its EdgeCtx counterpart on every real edge
+def _flat_uniform(g) -> jax.Array:
+    return jnp.ones_like(g.weights)
+
+
+def _flat_weight(g) -> jax.Array:
+    return g.weights
+
+
+def _flat_degree(g) -> jax.Array:
+    deg = g.indptr[1:] - g.indptr[:-1]
+    return deg[g.indices].astype(jnp.float32)
+
+
 def deepwalk() -> SamplingSpec:
     """Unbiased simple random walk (DeepWalk)."""
-    return SamplingSpec(edge_bias=uniform_edge_bias, name="deepwalk", track_visited=False)
+    return SamplingSpec(
+        edge_bias=uniform_edge_bias,
+        flat_edge_bias=_flat_uniform,
+        name="deepwalk",
+        track_visited=False,
+    )
 
 
 def biased_random_walk() -> SamplingSpec:
     """Static biased walk: neighbor degree as bias (Biased DeepWalk)."""
-    return SamplingSpec(edge_bias=degree_edge_bias, name="biased_rw", track_visited=False)
+    return SamplingSpec(
+        edge_bias=degree_edge_bias,
+        flat_edge_bias=_flat_degree,
+        name="biased_rw",
+        track_visited=False,
+    )
 
 
 def weighted_random_walk() -> SamplingSpec:
     """Static biased walk on edge weights."""
-    return SamplingSpec(edge_bias=weight_edge_bias, name="weighted_rw", track_visited=False)
+    return SamplingSpec(
+        edge_bias=weight_edge_bias,
+        flat_edge_bias=_flat_weight,
+        name="weighted_rw",
+        track_visited=False,
+    )
 
 
 def node2vec(p: float = 2.0, q: float = 0.5) -> SamplingSpec:
@@ -66,7 +96,13 @@ def metropolis_hastings_walk() -> SamplingSpec:
         stay = jax.random.uniform(key, u.shape) >= accept_p
         return jnp.where(stay & (ctx.v >= 0), ctx.v, u)
 
-    return SamplingSpec(edge_bias=uniform_edge_bias, update=update, name="mhrw", track_visited=False)
+    return SamplingSpec(
+        edge_bias=uniform_edge_bias,
+        flat_edge_bias=_flat_uniform,
+        update=update,
+        name="mhrw",
+        track_visited=False,
+    )
 
 
 def random_walk_with_jump(jump_prob: float, num_vertices: int) -> SamplingSpec:
@@ -78,7 +114,13 @@ def random_walk_with_jump(jump_prob: float, num_vertices: int) -> SamplingSpec:
         tgt = jax.random.randint(kv, u.shape, 0, num_vertices)
         return jnp.where(jump, tgt, u)
 
-    return SamplingSpec(edge_bias=uniform_edge_bias, update=update, name="rw_jump", track_visited=False)
+    return SamplingSpec(
+        edge_bias=uniform_edge_bias,
+        flat_edge_bias=_flat_uniform,
+        update=update,
+        name="rw_jump",
+        track_visited=False,
+    )
 
 
 def random_walk_with_restart(restart_prob: float, home: int) -> SamplingSpec:
@@ -88,7 +130,13 @@ def random_walk_with_restart(restart_prob: float, home: int) -> SamplingSpec:
         restart = jax.random.uniform(key, u.shape) < restart_prob
         return jnp.where(restart, jnp.full_like(u, home), u)
 
-    return SamplingSpec(edge_bias=uniform_edge_bias, update=update, name="rw_restart", track_visited=False)
+    return SamplingSpec(
+        edge_bias=uniform_edge_bias,
+        flat_edge_bias=_flat_uniform,
+        update=update,
+        name="rw_restart",
+        track_visited=False,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -44,6 +44,8 @@ class EdgeCtx(NamedTuple):
 BiasFn = Callable[[VertexCtx], jax.Array]
 EdgeBiasFn = Callable[[EdgeCtx], jax.Array]
 UpdateFn = Callable[[jax.Array, EdgeCtx, jax.Array], jax.Array]
+# graph -> (E,) per-edge bias in CSR order, for the compiled walk fast path
+FlatEdgeBiasFn = Callable[[object], jax.Array]
 
 
 def uniform_vertex_bias(ctx: VertexCtx) -> jax.Array:
@@ -96,4 +98,17 @@ class SamplingSpec:
     needs_prev_neighbors: bool = False
     # forest fire: geometric NeighborSize with burning probability p_f
     burn_prob: Optional[float] = None
+    # Compiled walk fast path (DESIGN.md §6): when the edge bias depends only
+    # on static edge/endpoint features, provide it as a flat (E,) array in
+    # CSR order so the degree-bucketed Pallas scheduler can sample straight
+    # from the edge arrays, never materializing padded neighbor tensors.
+    # Must satisfy flat_edge_bias(g)[e] == edge_bias(ctx) for every real edge
+    # e.  None ⇒ state-dependent bias; backend="pallas" falls back to the
+    # reference per-step selection (still kernel-dispatched).  On the fast
+    # path, ``update`` hooks receive a rank-preserving minimal EdgeCtx whose
+    # neighbor axis holds only the selected edge (D = 1) and whose
+    # ``weight`` is a unit placeholder (the real edge weight is never
+    # gathered) — update hooks that read ``ctx.weight`` must leave
+    # flat_edge_bias unset to stay on the full-context path.
+    flat_edge_bias: Optional[FlatEdgeBiasFn] = None
     name: str = "custom"

@@ -1,0 +1,227 @@
+"""Selection backend dispatcher: reference jnp vs compiled Pallas (DESIGN.md §6).
+
+The engines never call the Pallas kernels directly — every ``select_*`` call
+routes through this module, which owns the plumbing the kernels need:
+
+- backend resolution: ``"auto"`` compiles through Mosaic on TPU and falls
+  back to the pure-jnp reference path elsewhere (interpret-mode kernels are
+  correct everywhere but only *fast* on TPU);
+- lane-aligned padding of candidate pools to multiples of 128 (zero-bias pad
+  candidates get zero-width CTPS regions, so results are unchanged);
+- pre-generated counted-RNG retry budgets (:func:`repro.core.select.retry_randoms`)
+  so the kernel's fixed ``ITERS`` unroll consumes bit-for-bit the same
+  uniforms as the reference retry loop — ``backend="pallas"`` and
+  ``backend="reference"`` agree exactly whenever the budget suffices;
+- degree-bucketed walk scheduling (:func:`walk_step_bucketed`): per step,
+  walkers are partitioned by degree into small/medium cohorts served by
+  :func:`repro.kernels.walk_step.walk_step_pallas` with per-bucket
+  ``max_seg`` windows, and a huge-degree cohort served by the chunked
+  two-pass scan — the TPU analogue of the paper's workload-aware
+  (KnightKing-style) scheduling.
+"""
+from __future__ import annotations
+
+from typing import Literal, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import select as sel
+from repro.kernels.its_select import its_select_pallas
+from repro.kernels.walk_step import pad_csr_for_kernel, walk_step_pallas
+
+Backend = Literal["auto", "reference", "pallas"]
+
+#: candidate pools are padded to multiples of the TPU lane width
+LANES = 128
+
+#: default degree-bucket ladder for the walk fast path (DESIGN.md §6):
+#: deg ∈ (0, 128] → small cohort, (128, 512] → medium cohort, > 512 → chunked
+WALK_BUCKETS = (128, 512)
+
+#: chunk width of the two-pass huge-degree scan
+CHUNK = 512
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    """Resolve ``"auto"`` → ``"pallas"`` on TPU, ``"reference"`` elsewhere."""
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "reference"
+    if backend not in ("reference", "pallas"):
+        raise ValueError(f"unknown backend {backend!r} (use auto/reference/pallas)")
+    return backend
+
+
+def pad_lanes(biases: jax.Array) -> jax.Array:
+    """Pad the candidate (last) dim to a lane multiple with zero bias."""
+    p = biases.shape[-1]
+    pad = (-p) % LANES
+    if pad:
+        biases = jnp.pad(biases, [(0, 0)] * (biases.ndim - 1) + [(0, pad)])
+    return biases
+
+
+def _masked(biases: jax.Array, mask: jax.Array | None) -> jax.Array:
+    b = jnp.maximum(biases.astype(jnp.float32), 0.0)
+    if mask is not None:
+        b = jnp.where(mask, b, 0.0)
+    return b
+
+
+def select_without_replacement(
+    key: jax.Array,
+    biases: jax.Array,
+    mask: jax.Array | None,
+    k: int,
+    *,
+    method: sel.SelectMethod = "its_brs",
+    backend: Backend = "auto",
+    max_iters: int = 32,
+    blk_i: int = 8,
+) -> sel.SelectResult:
+    """Backend-dispatched without-replacement selection.
+
+    ``its_brs`` has a fused Pallas kernel; ``gumbel`` is already TPU-native
+    vector code and ``repeated``/``updated`` are diagnostic baselines, so all
+    three run the reference implementation on every backend.  With the same
+    ``max_iters`` the two backends agree bit-for-bit on indices, validity and
+    the iteration/search counters (shared counted-RNG budget).
+    """
+    be = resolve_backend(backend)
+    if be == "reference" or method != "its_brs":
+        return sel.select_without_replacement(key, biases, mask, k, method=method, max_iters=max_iters)
+
+    b = _masked(biases, mask)
+    batch_shape = b.shape[:-1]
+    p = b.shape[-1]
+    rands = sel.retry_randoms(key, batch_shape, max_iters, k)
+    bf = pad_lanes(b.reshape(-1, p))
+    rf = rands.reshape(-1, max_iters, k)
+    idx, stats = its_select_pallas(bf, rf, blk_i=blk_i, with_stats=True)
+    idx = idx.reshape(batch_shape + (k,))
+    stats = stats.reshape(batch_shape + (2,))
+    return sel.SelectResult(idx, idx >= 0, stats[..., 0], stats[..., 1])
+
+
+def select_with_replacement(
+    key: jax.Array,
+    biases: jax.Array,
+    mask: jax.Array | None,
+    k: int,
+    *,
+    backend: Backend = "auto",
+    blk_i: int = 8,
+) -> jax.Array:
+    """Backend-dispatched with-replacement ITS draw (random-walk case).
+
+    Only ``k == 1`` has a kernel route (a single draw cannot self-collide, so
+    the without-replacement kernel with a one-round budget computes exactly
+    the with-replacement draw); larger ``k`` runs the reference path.
+    Degenerate all-zero rows return ``P - 1`` like the reference (callers
+    mask dead instances).
+    """
+    be = resolve_backend(backend)
+    if be == "reference" or k != 1:
+        return sel.select_with_replacement(key, biases, mask, k)
+    b = _masked(biases, mask)
+    batch_shape = b.shape[:-1]
+    p = b.shape[-1]
+    # same bits as the reference's uniform(key, batch + (1,)) draw
+    r = jax.random.uniform(key, tuple(batch_shape) + (1, 1), dtype=jnp.float32)
+    idx = its_select_pallas(pad_lanes(b.reshape(-1, p)), r.reshape(-1, 1, 1), blk_i=blk_i)
+    idx = idx.reshape(batch_shape + (1,))
+    return jnp.where(idx >= 0, idx, p - 1)
+
+
+# ---------------------------------------------------------------------------
+# Degree-bucketed walk scheduling (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+
+def walk_bucket_plan(max_degree: int, segs: tuple = WALK_BUCKETS) -> tuple[tuple, bool]:
+    """Static per-graph schedule: kernel segment sizes + need for chunked tail.
+
+    Returns ``(buckets, use_chunked)``: one :func:`walk_step_pallas` cohort
+    per bucket segment, plus the two-pass chunked scan for degrees above the
+    last segment.  Buckets the graph cannot populate are dropped at trace
+    time.
+    """
+    buckets = []
+    lo = 0
+    for s in segs:
+        if max_degree > lo:
+            buckets.append(s)
+        lo = s
+    if not buckets:
+        buckets = [segs[0]]
+    return tuple(buckets), max_degree > segs[-1]
+
+
+def pad_walk_csr(indices: jax.Array, flat_bias: jax.Array, buckets: tuple) -> dict:
+    """Pre-pad flat CSR edge arrays once, shared by every bucket.
+
+    One padding to the largest segment satisfies all smaller ones: the
+    padded length is a multiple of every smaller ``seg`` (segments are
+    powers-of-two multiples of 128) and the single spare ``buckets[-1]``
+    block covers each cohort's ``blk+1`` window, so no per-bucket copies
+    of the (E,) arrays are materialized.
+    """
+    big = max(buckets)
+    padded = pad_csr_for_kernel(indices, flat_bias, big)
+    assert all(big % seg == 0 for seg in buckets), buckets
+    return {seg: padded for seg in buckets}
+
+
+def walk_step_bucketed(
+    key: jax.Array,
+    indptr: jax.Array,
+    indices: jax.Array,
+    flat_bias: jax.Array,
+    padded: Mapping[int, tuple],
+    cur: jax.Array,
+    *,
+    buckets: tuple,
+    use_chunked: bool,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One bias-weighted transition for all walkers, scheduled by degree.
+
+    ``flat_bias`` is the (E,) per-edge bias aligned with CSR order
+    (``SamplingSpec.flat_edge_bias``); ``padded`` maps each bucket segment to
+    its :func:`pad_csr_for_kernel` output.  Walkers outside a cohort run with
+    ``deg = 0`` (a dead-end no-op) and take their result from their own
+    cohort.  Returns next vertices (W,) int32; -1 for finished walkers and
+    dead ends.
+    """
+    safe = jnp.maximum(cur, 0)
+    starts = indptr[safe]
+    deg = jnp.where(cur >= 0, indptr[safe + 1] - starts, 0)
+    r = jax.random.uniform(jax.random.fold_in(key, 0), cur.shape, dtype=jnp.float32)
+
+    nxt = jnp.full_like(cur, -1)
+    lo = 0
+    for seg in buckets:
+        inds_p, bias_p = padded[seg]
+        inb = (deg > lo) & (deg <= seg)
+        cand = walk_step_pallas(
+            jnp.where(inb, starts, 0),
+            jnp.where(inb, deg, 0),
+            inds_p,
+            bias_p,
+            r,
+            max_seg=seg,
+            interpret=interpret,
+        )
+        nxt = jnp.where(inb, cand, nxt)
+        lo = seg
+
+    if use_chunked:
+        huge = deg > buckets[-1]
+        safe_cur = jnp.where(huge, safe, 0)
+        off = sel.walk_transition_chunked(
+            jax.random.fold_in(key, 1), indptr, flat_bias, safe_cur, chunk=CHUNK
+        )
+        eidx = jnp.clip(indptr[safe_cur] + jnp.maximum(off, 0), 0, indices.shape[0] - 1)
+        cand = jnp.where(off >= 0, indices[eidx], -1)
+        nxt = jnp.where(huge, cand, nxt)
+    return nxt

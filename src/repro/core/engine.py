@@ -8,8 +8,11 @@ Two drivers, both batched over thousands of concurrent instances
                             forest-fire / snowball / MDRW).
 
 Both are jit-compiled, use counted RNG, fixed shapes, masked semantics, and
-the ``select`` module for all bias-based selection, so they run unchanged
-under vmap / shard_map / the partition scheduler.
+route all bias-based selection through the backend dispatcher
+(``core.backend``), so they run unchanged under vmap / shard_map / the
+partition scheduler.  ``backend="pallas"`` swaps in the fused Pallas
+selection kernels and the degree-bucketed walk scheduler; ``"reference"``
+keeps everything in pure jnp; ``"auto"`` picks per device (DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -20,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.api import EdgeCtx, SamplingSpec, VertexCtx
+from repro.core import backend as bk
 from repro.core import select as sel
 from repro.graph.csr import CSRGraph, neighbors_padded
 
@@ -63,7 +67,7 @@ class WalkResult(NamedTuple):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("depth", "spec", "max_degree", "method"),
+    static_argnames=("depth", "spec", "max_degree", "method", "backend"),
 )
 def random_walk(
     graph: CSRGraph,
@@ -74,19 +78,64 @@ def random_walk(
     spec: SamplingSpec,
     max_degree: int,
     method: str = "its_brs",
+    backend: bk.Backend = "auto",
 ) -> WalkResult:
-    """Run one random-walk step per scan iteration for all instances."""
+    """Run one random-walk step per scan iteration for all instances.
+
+    With ``backend="pallas"`` and a spec that provides ``flat_edge_bias``
+    (and no prev-dependence), each step runs the degree-bucketed kernel
+    scheduler straight off the flat CSR arrays — no padded neighbor tensors
+    are ever materialized.  Other specs keep the gather-based step but still
+    dispatch the ITS draw to the selection kernel.
+    """
     num_inst = seeds.shape[0]
+    be = bk.resolve_backend(backend)
+    fast_walk = (
+        be == "pallas"
+        and spec.flat_edge_bias is not None
+        and not spec.needs_prev_neighbors
+    )
+    if fast_walk:
+        flat_bias = spec.flat_edge_bias(graph)
+        buckets, use_chunked = bk.walk_bucket_plan(max_degree)
+        padded = bk.pad_walk_csr(graph.indices, flat_bias, buckets)
 
     def step(carry, it):
         cur, prev = carry
         kstep = jax.random.fold_in(key, it)
-        ctx, mask = _edge_ctx(graph, cur, prev, it, max_degree, spec.needs_prev_neighbors)
-        biases = jnp.where(mask, spec.edge_bias(ctx), 0.0)
-        idx = sel.select_with_replacement(jax.random.fold_in(kstep, 1), biases, mask, 1)[..., 0]
-        u = jnp.take_along_axis(ctx.u, idx[..., None], axis=-1)[..., 0]
-        alive = (cur >= 0) & jnp.any(mask, axis=-1)
-        u = jnp.where(alive, u, -1)
+        if fast_walk:
+            u = bk.walk_step_bucketed(
+                jax.random.fold_in(kstep, 1),
+                graph.indptr,
+                graph.indices,
+                flat_bias,
+                padded,
+                cur,
+                buckets=buckets,
+                use_chunked=use_chunked,
+            )
+            alive = u >= 0
+            # minimal D=1 ctx: update hooks see only the selected edge;
+            # weight is a unit placeholder (contract in api.flat_edge_bias)
+            ctx = EdgeCtx(
+                v=cur,
+                u=u[..., None],
+                weight=jnp.ones((num_inst, 1), jnp.float32),
+                deg_v=_degree(graph, cur),
+                deg_u=_degree(graph, u)[..., None],
+                prev=prev,
+                is_prev_neighbor=None,
+                depth=it,
+            )
+        else:
+            ctx, mask = _edge_ctx(graph, cur, prev, it, max_degree, spec.needs_prev_neighbors)
+            biases = jnp.where(mask, spec.edge_bias(ctx), 0.0)
+            idx = bk.select_with_replacement(
+                jax.random.fold_in(kstep, 1), biases, mask, 1, backend=be
+            )[..., 0]
+            u = jnp.take_along_axis(ctx.u, idx[..., None], axis=-1)[..., 0]
+            alive = (cur >= 0) & jnp.any(mask, axis=-1)
+            u = jnp.where(alive, u, -1)
         nxt = spec.update(jax.random.fold_in(kstep, 2), ctx, u)
         nxt = jnp.where(alive, nxt, -1)
         return (nxt, cur), nxt
@@ -108,7 +157,7 @@ class SampleResult(NamedTuple):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("depth", "spec", "max_degree", "pool_capacity", "method", "max_vertices"),
+    static_argnames=("depth", "spec", "max_degree", "pool_capacity", "method", "max_vertices", "backend"),
 )
 def traversal_sample(
     graph: CSRGraph,
@@ -121,34 +170,39 @@ def traversal_sample(
     pool_capacity: int,
     method: str = "its_brs",
     max_vertices: int = 0,  # >0 enables visited bitmap of that many vertices
+    backend: bk.Backend = "auto",
 ) -> SampleResult:
-    """Paper Fig. 2(b) MAIN: iterate SELECT-frontier / GATHER / SELECT-neighbors / UPDATE."""
+    """Paper Fig. 2(b) MAIN: iterate SELECT-frontier / GATHER / SELECT-neighbors / UPDATE.
+
+    The depth loop is a single ``jax.lax.scan`` over preallocated edge
+    buffers, so trace/compile size is independent of ``depth``.
+    """
     num_inst, _ = seed_pools.shape
+    be = bk.resolve_backend(backend)
     fs, ns = spec.frontier_size, spec.neighbor_size
     edges_per_iter = fs * ns if spec.per_vertex else ns
     cap = depth * edges_per_iter
+    track = spec.track_visited and max_vertices > 0
 
-    pool = jnp.full((num_inst, pool_capacity), -1, jnp.int32)
-    pool = pool.at[:, : seed_pools.shape[1]].set(seed_pools.astype(jnp.int32))
-    visited = None
-    if spec.track_visited and max_vertices > 0:
-        visited = jnp.zeros((num_inst, max_vertices), bool)
+    pool0 = jnp.full((num_inst, pool_capacity), -1, jnp.int32)
+    pool0 = pool0.at[:, : seed_pools.shape[1]].set(seed_pools.astype(jnp.int32))
+    if track:
+        visited0 = jnp.zeros((num_inst, max_vertices), bool)
         seed_oh = jax.nn.one_hot(jnp.maximum(seed_pools, 0), max_vertices, dtype=bool)
-        visited = visited | jnp.any(seed_oh & (seed_pools >= 0)[..., None], axis=1)
+        visited0 = visited0 | jnp.any(seed_oh & (seed_pools >= 0)[..., None], axis=1)
+    else:
+        visited0 = jnp.zeros((num_inst, 1), bool)  # inert carry placeholder
 
-    esrc = jnp.full((num_inst, cap), -1, jnp.int32)
-    edst = jnp.full((num_inst, cap), -1, jnp.int32)
-    ecnt = jnp.zeros((num_inst,), jnp.int32)
-    tot_iters = jnp.zeros((), jnp.int32)
-    tot_searches = jnp.zeros((), jnp.int32)
-
-    for it in range(depth):
+    def step(carry, it):
+        pool, visited, esrc, edst, ecnt, tot_iters, tot_searches = carry
         kit = jax.random.fold_in(key, it)
         # ---- SELECT frontier from pool (line 4) --------------------------
         pmask = pool >= 0
         vctx = VertexCtx(v=pool, deg=jnp.where(pmask, _degree(graph, pool), 0), depth=it)
         vbias = jnp.where(pmask, spec.vertex_bias(vctx), 0.0)
-        fres = sel.select_without_replacement(jax.random.fold_in(kit, 0), vbias, pmask, fs, method=method)
+        fres = bk.select_without_replacement(
+            jax.random.fold_in(kit, 0), vbias, pmask, fs, method=method, backend=be
+        )
         frontier = jnp.where(
             fres.valid, jnp.take_along_axis(pool, jnp.maximum(fres.indices, 0), axis=-1), -1
         )  # (I, fs)
@@ -158,7 +212,7 @@ def traversal_sample(
         # ---- GATHER + EDGEBIAS (lines 5-6) ------------------------------
         ctx, emask = _edge_ctx(graph, frontier, jnp.full_like(frontier, -1), it, max_degree, spec.needs_prev_neighbors)
         ebias = jnp.where(emask, spec.edge_bias(ctx), 0.0)
-        if visited is not None:
+        if track:
             seen = jnp.take_along_axis(
                 visited[:, None, :], jnp.maximum(ctx.u, 0), axis=-1
             ) & (ctx.u >= 0)
@@ -167,7 +221,9 @@ def traversal_sample(
 
         if spec.per_vertex:
             # independent NeighborPool per frontier vertex (neighbor sampling)
-            nres = sel.select_without_replacement(jax.random.fold_in(kit, 1), ebias, emask, ns, method=method)
+            nres = bk.select_without_replacement(
+                jax.random.fold_in(kit, 1), ebias, emask, ns, method=method, backend=be
+            )
             src = jnp.broadcast_to(frontier[..., None], frontier.shape + (ns,))
             dst = jnp.where(
                 nres.valid, jnp.take_along_axis(ctx.u, jnp.maximum(nres.indices, 0), axis=-1), -1
@@ -198,7 +254,9 @@ def traversal_sample(
             flat_mask = emask.reshape(num_inst, -1)
             flat_u = ctx.u.reshape(num_inst, -1)
             flat_v = jnp.broadcast_to(frontier[..., None], ctx.u.shape).reshape(num_inst, -1)
-            nres = sel.select_without_replacement(jax.random.fold_in(kit, 1), flat_bias, flat_mask, ns, method=method)
+            nres = bk.select_without_replacement(
+                jax.random.fold_in(kit, 1), flat_bias, flat_mask, ns, method=method, backend=be
+            )
             gi = jnp.maximum(nres.indices, 0)
             src = jnp.where(nres.valid, jnp.take_along_axis(flat_v, gi, axis=-1), -1)
             dst = jnp.where(nres.valid, jnp.take_along_axis(flat_u, gi, axis=-1), -1)
@@ -207,7 +265,6 @@ def traversal_sample(
             tot_searches = tot_searches + jnp.sum(nres.searches)
 
         # ---- record sampled edges (line 8) -------------------------------
-        k = src.shape[-1]
         esrc = jax.lax.dynamic_update_slice(esrc, src, (0, it * edges_per_iter))
         edst = jax.lax.dynamic_update_slice(edst, dst, (0, it * edges_per_iter))
         ecnt = ecnt + jnp.sum(valid, axis=-1, dtype=jnp.int32)
@@ -221,7 +278,7 @@ def traversal_sample(
         )
         new_v = spec.update(jax.random.fold_in(kit, 2), ectx_flat, dst)
         new_v = jnp.where(valid, new_v, -1)
-        if visited is not None:
+        if track:
             oh = jax.nn.one_hot(jnp.maximum(new_v, 0), max_vertices, dtype=bool)
             visited = visited | jnp.any(oh & (new_v >= 0)[..., None], axis=1)
         if spec.replace_selected:
@@ -235,24 +292,35 @@ def traversal_sample(
             pool = _insert_into_pool(pool, new_v)
         else:
             pool = _insert_into_pool(pool, new_v)
+        return (pool, visited, esrc, edst, ecnt, tot_iters, tot_searches), None
 
+    init = (
+        pool0,
+        visited0,
+        jnp.full((num_inst, cap), -1, jnp.int32),
+        jnp.full((num_inst, cap), -1, jnp.int32),
+        jnp.zeros((num_inst,), jnp.int32),
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), jnp.int32),
+    )
+    (pool, _, esrc, edst, ecnt, tot_iters, tot_searches), _ = jax.lax.scan(
+        step, init, jnp.arange(depth)
+    )
     return SampleResult(esrc, edst, ecnt, pool, tot_iters, tot_searches)
 
 
 def _insert_into_pool(pool: jax.Array, new_v: jax.Array) -> jax.Array:
-    """Insert new vertices into -1 slots (left-compacting both sides)."""
+    """Insert new vertices into -1 slots (left-compacting both sides).
+
+    Single cumsum-based compaction over the concatenated (pool, new) row:
+    surviving pool entries keep their relative order in slots 0..n-1, new
+    entries append after them, overflow past capacity is dropped (DESIGN.md
+    §7 — replaces the earlier double argsort).
+    """
     cap = pool.shape[-1]
-    # compact existing pool entries to the left
-    order = jnp.argsort(jnp.where(pool >= 0, 0, 1), axis=-1, stable=True)
-    pool = jnp.take_along_axis(pool, order, axis=-1)
-    nvalid = jnp.sum(pool >= 0, axis=-1)
-    # compact new vertices
-    norder = jnp.argsort(jnp.where(new_v >= 0, 0, 1), axis=-1, stable=True)
-    new_v = jnp.take_along_axis(new_v, norder, axis=-1)
-    # scatter new entries at offset nvalid
-    k = new_v.shape[-1]
-    pos = nvalid[..., None] + jnp.arange(k)
-    ok = (new_v >= 0) & (pos < cap)
+    merged = jnp.concatenate([pool, new_v], axis=-1)
+    valid = merged >= 0
+    pos = jnp.cumsum(valid, axis=-1) - 1  # target slot of each valid entry
+    ok = valid & (pos < cap)
     onehot = (pos[..., None] == jnp.arange(cap)) & ok[..., None]
-    placed = jnp.max(jnp.where(onehot, new_v[..., None], -1), axis=-2)
-    return jnp.where(placed >= 0, placed, pool)
+    return jnp.max(jnp.where(onehot, merged[..., None], -1), axis=-2)

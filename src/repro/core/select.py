@@ -87,6 +87,23 @@ def _dedup_priority(cand: jax.Array, active: jax.Array) -> jax.Array:
     return active & ~beaten
 
 
+def retry_randoms(key: jax.Array, batch_shape: tuple, iters: int, k: int) -> jax.Array:
+    """Pre-generated retry budget: ``(..., iters, k)`` uniforms.
+
+    Round ``t`` holds exactly the bits ``_select_its_loop`` draws in round
+    ``t`` (``uniform(fold_in(key, t), batch + (k,))``) — this is the counted
+    RNG contract that makes the Pallas kernel path in ``core.backend``
+    bit-identical to the reference retry loop (DESIGN.md §6).
+    """
+    if iters < 1:
+        raise ValueError(f"retry budget needs at least one round, got iters={iters}")
+    rs = [
+        jax.random.uniform(jax.random.fold_in(key, t), tuple(batch_shape) + (k,), dtype=jnp.float32)
+        for t in range(iters)
+    ]
+    return jnp.stack(rs, axis=-2)
+
+
 def select_without_replacement(
     key: jax.Array,
     biases: jax.Array,
@@ -176,6 +193,8 @@ def _select_its_loop(key, biases, mask, k, *, use_brs: bool, max_iters: int) -> 
 
     def body(carry):
         it, done, out, selmask, iters, searches = carry
+        # NOTE: this per-round draw is the counted-RNG contract shared with
+        # retry_randoms()/the Pallas kernel path — change both or neither.
         rkey = jax.random.fold_in(key, it)
         r1 = jax.random.uniform(rkey, batch_shape + (k,), dtype=jnp.float32)
         pending = ~done

@@ -1,3 +1,20 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+- ``its_select``  — fused CTPS build + ITS + BRS retry (SELECT, DESIGN.md §2)
+- ``walk_step``   — segment-DMA weighted walk transition (DESIGN.md §6)
+- ``ops``         — jit'd wrappers owning RNG and shape plumbing
+- ``ref``         — pure-jnp oracles consuming the same random budgets
+
+Kernels run compiled through Mosaic on TPU and fall back to ``interpret=True``
+elsewhere (``resolve_interpret``); the selection backend dispatcher in
+``repro.core.backend`` decides when the engine uses them at all.
+"""
+from repro.kernels.its_select import its_select_pallas, resolve_interpret
+from repro.kernels.walk_step import pad_csr_for_kernel, walk_step_pallas
+
+__all__ = [
+    "its_select_pallas",
+    "walk_step_pallas",
+    "pad_csr_for_kernel",
+    "resolve_interpret",
+]

@@ -27,7 +27,7 @@ from jax.experimental import pallas as pl
 _EPS = 1e-12
 
 
-def _its_select_kernel(biases_ref, rands_ref, out_ref, *, iters: int, k: int):
+def _its_select_kernel(biases_ref, rands_ref, out_ref, stats_ref, *, iters: int, k: int):
     b = jnp.maximum(biases_ref[...].astype(jnp.float32), 0.0)  # (BLK_I, P)
     blk_i, p = b.shape
     sums = jnp.cumsum(b, axis=-1)
@@ -41,6 +41,8 @@ def _its_select_kernel(biases_ref, rands_ref, out_ref, *, iters: int, k: int):
     done = lane >= want[:, None]
     out = jnp.full((blk_i, k), -1, jnp.int32)
     selmask = jnp.zeros((blk_i, p), jnp.float32)
+    it_acc = jnp.zeros((blk_i,), jnp.int32)
+    se_acc = jnp.zeros((blk_i,), jnp.int32)
 
     def gather(table, idx):
         oh = (idx[:, :, None] == jax.lax.broadcasted_iota(jnp.int32, (blk_i, k, p), 2)).astype(
@@ -53,10 +55,16 @@ def _its_select_kernel(biases_ref, rands_ref, out_ref, *, iters: int, k: int):
         return jnp.clip(idx, 0, p - 1)
 
     def body(it, carry):
-        done, out, selmask = carry
+        done, out, selmask, it_acc, se_acc = carry
+        pending = ~done
         r1 = jax.lax.dynamic_slice_in_dim(rands_ref[...], it, 1, axis=1)[:, 0, :]
         idx1 = search(r1)
         hit1 = gather(selmask, idx1) > 0.5
+        # retry-loop accounting (paper Figs. 11/12), bit-identical to the
+        # reference loop in core.select._select_its_loop
+        it_acc = it_acc + jnp.any(pending, axis=-1).astype(jnp.int32)
+        se_acc = se_acc + jnp.sum(pending.astype(jnp.int32), axis=-1)
+        se_acc = se_acc + jnp.sum((pending & hit1).astype(jnp.int32), axis=-1)
         l = gather(lower, idx1)
         h = gather(ctps, idx1)
         delta = h - l
@@ -85,41 +93,70 @@ def _its_select_kernel(biases_ref, rands_ref, out_ref, *, iters: int, k: int):
         done = done | win
         got = jnp.sum(done.astype(jnp.int32), axis=-1)
         done = done | ((got >= want)[:, None] & (lane >= want[:, None]))
-        return done, out, selmask
+        return done, out, selmask, it_acc, se_acc
 
-    done, out, selmask = jax.lax.fori_loop(0, iters, body, (done, out, selmask))
+    done, out, selmask, it_acc, se_acc = jax.lax.fori_loop(
+        0, iters, body, (done, out, selmask, it_acc, se_acc)
+    )
     out_ref[...] = out
+    stats_ref[...] = jnp.stack([it_acc, se_acc], axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("blk_i", "interpret"))
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` → interpret off-TPU, compile through Mosaic on TPU."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+@functools.partial(jax.jit, static_argnames=("blk_i", "interpret", "with_stats"))
 def its_select_pallas(
     biases: jax.Array,
     rands: jax.Array,
     *,
     blk_i: int = 8,
-    interpret: bool = True,
-) -> jax.Array:
+    interpret: bool | None = None,
+    with_stats: bool = False,
+):
     """Fused without-replacement ITS+BRS selection.
 
     biases: (I, P) float — per-instance candidate biases (<=0 → unselectable).
     rands:  (I, ITERS, K) float — pre-generated retry budget.
-    Returns indices (I, K) int32 (-1 = unfilled).
+    Returns indices (I, K) int32 (-1 = unfilled); with ``with_stats=True``
+    also an (I, 2) int32 array of (retry iterations, CTPS searches) per
+    instance (paper Figs. 11/12 accounting).
 
-    I must be a multiple of ``blk_i``; P should be lane-aligned (mult. of 128)
-    for best TPU layout (any P works functionally).
+    Any I works — instances are padded internally to a multiple of ``blk_i``
+    and the pad rows sliced off.  P should be lane-aligned (multiple of 128)
+    for best TPU layout (any P works functionally; the dispatcher in
+    ``core.backend`` pads pools to lane multiples, DESIGN.md §6).
     """
     i_dim, p = biases.shape
     iters, k = rands.shape[1], rands.shape[2]
-    assert i_dim % blk_i == 0, f"I={i_dim} not a multiple of blk_i={blk_i}"
+    pad_i = (-i_dim) % blk_i
+    if pad_i:
+        # zero-bias pad rows select nothing; sliced off below
+        biases = jnp.pad(biases, ((0, pad_i), (0, 0)))
+        rands = jnp.pad(rands, ((0, pad_i), (0, 0), (0, 0)))
+    i_pad = i_dim + pad_i
     kernel = functools.partial(_its_select_kernel, iters=iters, k=k)
-    return pl.pallas_call(
+    out, stats = pl.pallas_call(
         kernel,
-        grid=(i_dim // blk_i,),
+        grid=(i_pad // blk_i,),
         in_specs=[
             pl.BlockSpec((blk_i, p), lambda i: (i, 0)),
             pl.BlockSpec((blk_i, iters, k), lambda i: (i, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((blk_i, k), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((i_dim, k), jnp.int32),
-        interpret=interpret,
+        out_specs=[
+            pl.BlockSpec((blk_i, k), lambda i: (i, 0)),
+            pl.BlockSpec((blk_i, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((i_pad, k), jnp.int32),
+            jax.ShapeDtypeStruct((i_pad, 2), jnp.int32),
+        ],
+        interpret=resolve_interpret(interpret),
     )(biases, rands)
+    if with_stats:
+        return out[:i_dim], stats[:i_dim]
+    return out[:i_dim]

@@ -16,8 +16,6 @@ from repro.graph.csr import CSRGraph
 from repro.kernels.its_select import its_select_pallas
 from repro.kernels.walk_step import pad_csr_for_kernel, walk_step_pallas
 
-_ON_TPU = jax.default_backend() == "tpu"
-
 
 @functools.partial(jax.jit, static_argnames=("k", "iters", "blk_i"))
 def its_select(
@@ -32,13 +30,8 @@ def its_select(
 
     biases: (I, P); returns (I, K) int32 indices, -1 where unfilled.
     """
-    i_dim, p = biases.shape
-    pad_i = (-i_dim) % blk_i
-    if pad_i:
-        biases = jnp.pad(biases, ((0, pad_i), (0, 0)))
     rands = jax.random.uniform(key, (biases.shape[0], iters, k), dtype=jnp.float32)
-    out = its_select_pallas(biases, rands, blk_i=blk_i, interpret=not _ON_TPU)
-    return out[:i_dim]
+    return its_select_pallas(biases, rands, blk_i=blk_i)
 
 
 @functools.partial(jax.jit, static_argnames=("max_seg",))
@@ -59,6 +52,4 @@ def walk_step(
     degs = jnp.where(cur >= 0, graph.indptr[safe + 1] - starts, 0)
     indices, weights = pad_csr_for_kernel(graph.indices, graph.weights, max_seg)
     rand = jax.random.uniform(key, cur.shape, dtype=jnp.float32)
-    return walk_step_pallas(
-        starts, degs, indices, weights, rand, max_seg=max_seg, interpret=not _ON_TPU
-    )
+    return walk_step_pallas(starts, degs, indices, weights, rand, max_seg=max_seg)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.its_select import resolve_interpret
+
 _EPS = 1e-12
 
 
@@ -76,13 +78,15 @@ def walk_step_pallas(
     rand: jax.Array,
     *,
     max_seg: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """One weighted walk step for W walkers.
 
-    starts/degs: (W,) int32 row offsets/degrees (deg <= max_seg);
-    indices/weights: flat CSR arrays padded via :func:`pad_csr_for_kernel`;
-    rand: (W,) uniforms.  Returns next vertices (W,) int32 (-1 dead end).
+    starts/degs: (W,) int32 row offsets/degrees (deg <= max_seg — the
+    engine's degree-bucketed scheduler guarantees this per cohort,
+    DESIGN.md §6); indices/weights: flat CSR arrays padded via
+    :func:`pad_csr_for_kernel`; rand: (W,) uniforms.  Returns next
+    vertices (W,) int32 (-1 dead end).
     """
     w = starts.shape[0]
     e = indices.shape[0]
@@ -114,5 +118,5 @@ def walk_step_pallas(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((w,), jnp.int32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(starts, degs, rand, indices, indices, weights, weights)

@@ -1,0 +1,197 @@
+"""Selection backend dispatcher: reference vs Pallas parity, engine routing.
+
+The dispatcher's counted-RNG contract (``select.retry_randoms``) makes the
+kernel path bit-identical to the reference retry loop, so most assertions
+here are exact array equality — not statistical.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core import backend as bk
+from repro.core import select as sel
+from repro.core.engine import random_walk, traversal_sample
+from repro.graph import powerlaw_graph
+from repro.graph.csr import csr_from_edges
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _biases(key, i_dim, p, zero_frac=0.25):
+    b = jax.random.uniform(key, (i_dim, p))
+    keep = jax.random.uniform(jax.random.fold_in(key, 1), (i_dim, p)) > zero_frac
+    return b * keep
+
+
+class TestResolve:
+    def test_auto_resolves_by_device(self):
+        expect = "pallas" if jax.default_backend() == "tpu" else "reference"
+        assert bk.resolve_backend("auto") == expect
+
+    def test_explicit_passthrough(self):
+        assert bk.resolve_backend("reference") == "reference"
+        assert bk.resolve_backend("pallas") == "pallas"
+
+    def test_unknown_rejected(self):
+        with pytest.raises(ValueError):
+            bk.resolve_backend("cuda")
+
+
+class TestWithoutReplacementParity:
+    # non-aligned P (lane padding) and non-aligned I (blk_i padding) included
+    @pytest.mark.parametrize("i_dim,p,k", [(8, 128, 4), (13, 100, 3), (5, 37, 2), (32, 256, 8)])
+    def test_its_brs_bitwise(self, i_dim, p, k):
+        key = jax.random.PRNGKey(i_dim * p + k)
+        b = _biases(key, i_dim, p)
+        mask = jax.random.uniform(jax.random.fold_in(key, 2), (i_dim, p)) > 0.1
+        ref = bk.select_without_replacement(
+            key, b, mask, k, method="its_brs", backend="reference", max_iters=8
+        )
+        pal = bk.select_without_replacement(
+            key, b, mask, k, method="its_brs", backend="pallas", max_iters=8
+        )
+        np.testing.assert_array_equal(np.asarray(ref.indices), np.asarray(pal.indices))
+        np.testing.assert_array_equal(np.asarray(ref.valid), np.asarray(pal.valid))
+        np.testing.assert_array_equal(np.asarray(ref.iters), np.asarray(pal.iters))
+        np.testing.assert_array_equal(np.asarray(ref.searches), np.asarray(pal.searches))
+
+    def test_gumbel_bitwise(self):
+        b = _biases(KEY, 16, 64)
+        ref = bk.select_without_replacement(KEY, b, None, 4, method="gumbel", backend="reference")
+        pal = bk.select_without_replacement(KEY, b, None, 4, method="gumbel", backend="pallas")
+        np.testing.assert_array_equal(np.asarray(ref.indices), np.asarray(pal.indices))
+        np.testing.assert_array_equal(np.asarray(ref.valid), np.asarray(pal.valid))
+
+    def test_batched_leading_dims(self):
+        """(I, fs, P) pools — the per-vertex neighbor-selection shape."""
+        b = jax.random.uniform(KEY, (6, 3, 40))
+        ref = bk.select_without_replacement(
+            KEY, b, None, 2, method="its_brs", backend="reference", max_iters=6
+        )
+        pal = bk.select_without_replacement(
+            KEY, b, None, 2, method="its_brs", backend="pallas", max_iters=6
+        )
+        assert pal.indices.shape == (6, 3, 2)
+        np.testing.assert_array_equal(np.asarray(ref.indices), np.asarray(pal.indices))
+
+    def test_insufficient_candidates(self):
+        b = jnp.tile(jnp.array([1.0, 2.0, 0.0, 0.0]), (10, 1))
+        pal = bk.select_without_replacement(
+            KEY, b, None, 4, method="its_brs", backend="pallas", max_iters=8
+        )
+        assert int(pal.valid.sum(-1).max()) <= 2
+        assert not np.isin(np.asarray(pal.indices), [2, 3]).any()
+
+
+class TestWithReplacementParity:
+    @pytest.mark.parametrize("i_dim,p", [(16, 64), (11, 100)])
+    def test_k1_bitwise(self, i_dim, p):
+        key = jax.random.PRNGKey(i_dim + p)
+        b = _biases(key, i_dim, p)
+        ref = sel.select_with_replacement(key, b, None, 1)
+        pal = bk.select_with_replacement(key, b, None, 1, backend="pallas")
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+
+    def test_dead_rows_match_reference_degenerate_index(self):
+        b = jnp.zeros((4, 16))
+        ref = sel.select_with_replacement(KEY, b, None, 1)
+        pal = bk.select_with_replacement(KEY, b, None, 1, backend="pallas")
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+
+
+class TestEngineBackends:
+    @pytest.fixture(scope="class")
+    def graph(self):
+        return powerlaw_graph(256, seed=1, weighted=True)
+
+    def test_walk_fast_path_edges_exist(self, graph):
+        seeds = jax.random.randint(KEY, (48,), 0, graph.num_vertices)
+        res = random_walk(graph, seeds, KEY, depth=8, spec=alg.weighted_random_walk(),
+                          max_degree=graph.max_degree(), backend="pallas")
+        ip, ind = np.asarray(graph.indptr), np.asarray(graph.indices)
+        for row in np.asarray(res.walks):
+            for a, b in zip(row[:-1], row[1:]):
+                if a < 0 or b < 0:
+                    break
+                assert b in ind[ip[a]: ip[a + 1]]
+
+    def test_walk_fast_path_stationary_distribution(self, graph):
+        """Same distributional bar as the reference path (deepwalk ∝ degree)."""
+        seeds = jax.random.randint(KEY, (1024,), 0, graph.num_vertices)
+        res = random_walk(graph, seeds, KEY, depth=30, spec=alg.deepwalk(),
+                          max_degree=graph.max_degree(), backend="pallas")
+        last = np.asarray(res.walks)[:, -1]
+        last = last[last >= 0]
+        deg = np.asarray(graph.indptr[1:] - graph.indptr[:-1]).astype(float)
+        visit = np.bincount(last, minlength=graph.num_vertices).astype(float)
+        assert np.corrcoef(visit, deg)[0, 1] > 0.7
+
+    def test_walk_fallback_bitwise(self, graph):
+        """State-dependent bias (node2vec): pallas falls back to the gather
+        step but still dispatches the draw — bit-identical to reference."""
+        seeds = jax.random.randint(KEY, (32,), 0, graph.num_vertices)
+        kw = dict(depth=5, spec=alg.node2vec(), max_degree=graph.max_degree())
+        ref = random_walk(graph, seeds, KEY, backend="reference", **kw)
+        pal = random_walk(graph, seeds, KEY, backend="pallas", **kw)
+        np.testing.assert_array_equal(np.asarray(ref.walks), np.asarray(pal.walks))
+
+    def test_walk_chunked_huge_degree_cohort(self):
+        """A hub above the last bucket segment routes through the two-pass
+        chunked scan and still yields real neighbors."""
+        hub_deg = bk.WALK_BUCKETS[-1] + 37
+        src = np.concatenate([np.zeros(hub_deg, int), np.arange(1, hub_deg + 1)])
+        dst = np.concatenate([np.arange(1, hub_deg + 1), np.zeros(hub_deg, int)])
+        g = csr_from_edges(hub_deg + 1, src, dst)
+        assert g.max_degree() > bk.WALK_BUCKETS[-1]
+        seeds = jnp.zeros((8,), jnp.int32)
+        res = random_walk(g, seeds, KEY, depth=2, spec=alg.deepwalk(),
+                          max_degree=g.max_degree(), backend="pallas")
+        walks = np.asarray(res.walks)
+        assert (walks[:, 1] >= 1).all() and (walks[:, 1] <= hub_deg).all()
+        assert (walks[:, 2] == 0).all()  # spokes all point back at the hub
+
+    @pytest.mark.parametrize("name", ["neighbor_unbiased", "layer", "mdrw"])
+    def test_traversal_bitwise(self, graph, name):
+        pools = jax.random.randint(KEY, (8, 2), 0, graph.num_vertices)
+        kw = dict(depth=2, spec=alg.ALGORITHMS[name](), max_degree=graph.max_degree(),
+                  pool_capacity=64, max_vertices=graph.num_vertices)
+        ref = traversal_sample(graph, pools, KEY, backend="reference", **kw)
+        pal = traversal_sample(graph, pools, KEY, backend="pallas", **kw)
+        for a, b, field in zip(ref, pal, ref._fields):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=field)
+
+
+class TestScanTrace:
+    def test_traversal_trace_is_depth_independent(self):
+        g = powerlaw_graph(64, seed=2, weighted=True)
+        pools = jax.random.randint(KEY, (4, 1), 0, g.num_vertices)
+
+        def hlo_len(depth):
+            lo = traversal_sample.lower(
+                g, pools, KEY, depth=depth, spec=alg.layer_sampling(2, 2),
+                max_degree=g.max_degree(), pool_capacity=16,
+                max_vertices=g.num_vertices, backend="reference",
+            )
+            return len(lo.as_text())
+
+        s2, s8 = hlo_len(2), hlo_len(8)
+        assert s8 < 1.2 * s2, (s2, s8)
+
+
+class TestInsertIntoPool:
+    def test_compaction_semantics(self):
+        from repro.core.engine import _insert_into_pool
+        pool = jnp.array([[5, -1, 3, -1], [-1, -1, -1, -1]])
+        new = jnp.array([[7, -1, 9], [1, 2, -1]])
+        out = np.asarray(_insert_into_pool(pool, new))
+        np.testing.assert_array_equal(out[0], [5, 3, 7, 9])
+        np.testing.assert_array_equal(out[1], [1, 2, -1, -1])
+
+    def test_overflow_dropped(self):
+        from repro.core.engine import _insert_into_pool
+        pool = jnp.array([[1, 2, 3]])
+        new = jnp.array([[4, 5]])
+        out = np.asarray(_insert_into_pool(pool, new))
+        np.testing.assert_array_equal(out[0], [1, 2, 3])
