@@ -1,4 +1,4 @@
-"""Paper Figs. 13-15: out-of-memory sampling optimizations.
+"""Paper Figs. 13-15: out-of-memory sampling optimizations → BENCH_oom.json.
 
 Configurations (cumulative, as in the paper):
   base   — per-instance processing, round-robin partitions, no balancing
@@ -6,19 +6,28 @@ Configurations (cumulative, as in the paper):
   +WS    — workload-aware partition scheduling (§V-B)
   +BAL   — thread-block workload balancing (proportional budgets)
 Reported: wall time, kernel launches, partition transfers (Fig. 15) and
-kernel workload std (Fig. 14).
+kernel workload std (Fig. 14).  Besides the CSV rows, ``run()`` writes
+``BENCH_oom.json`` (same schema as ``BENCH_select.json``) so the §V
+ablation trajectory is tracked across PRs.
+
+Usage:  PYTHONPATH=src python benchmarks/fig13_oom.py
 """
 from __future__ import annotations
 
+import json
+import pathlib
+import sys
 import time
 
 import jax
 import numpy as np
 
-from benchmarks.common import BENCH_GRAPHS, row
-from repro.core import algorithms as alg
-from repro.core.oom import oom_random_walk
-from repro.graph.partition import partition_by_vertex_range
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks.common import BENCH_GRAPHS, row  # noqa: E402
+
+from repro.core import algorithms as alg  # noqa: E402
+from repro.core.oom import oom_random_walk  # noqa: E402
+from repro.graph.partition import partition_by_vertex_range  # noqa: E402
 
 CONFIGS = {
     "base": dict(batched=False, workload_aware=False, balance=False),
@@ -27,9 +36,12 @@ CONFIGS = {
     "+BA+WS+BAL": dict(batched=True, workload_aware=True, balance=True),
 }
 
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_oom.json"
+
 
 def run() -> list[str]:
     rows = []
+    results = []
     g = BENCH_GRAPHS["pl50k"]()
     md = min(g.max_degree(), 512)
     parts = partition_by_vertex_range(g, 8)
@@ -52,4 +64,34 @@ def run() -> list[str]:
             f"transfers={stats.partition_transfers};ktime_std={stats.kernel_time_std():.1f};"
             f"SEPS={stats.sampled_edges/secs:.3e}",
         ))
+        results.append({
+            "config": cname,
+            "seconds": secs,
+            "speedup_vs_base": base_time / secs,
+            "kernel_launches": stats.kernel_launches,
+            "partition_transfers": stats.partition_transfers,
+            "kernel_workload_std": stats.kernel_time_std(),
+            "sampled_edges_per_s": stats.sampled_edges / secs,
+            "frontier_dropped": stats.frontier_dropped,
+        })
+    from repro.core.backend import resolve_backend
+
+    payload = {
+        "bench": "fig13 out-of-memory walk ablation (pl50k, 8 partitions)",
+        "device": jax.default_backend(),
+        "backend": resolve_backend("auto"),  # what oom_random_walk actually ran
+        "pallas_interpret": resolve_backend("auto") == "pallas" and jax.default_backend() != "tpu",
+        "results": results,
+    }
+    OUT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     return rows
+
+
+def main() -> None:
+    for r in run():
+        print(r)
+    print(f"wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main()

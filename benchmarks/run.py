@@ -1,6 +1,6 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (see DESIGN.md §8 for the
+Prints ``name,us_per_call,derived`` CSV rows (see DESIGN.md §9 for the
 figure-to-module index).  ``python -m benchmarks.run [--only fig09,...]``.
 """
 from __future__ import annotations

@@ -5,6 +5,13 @@ of prompts token-by-token, then decodes continuations with the jitted
 serve step — same code path the decode_32k / long_500k dry-run cells lower.
 
     PYTHONPATH=src python examples/serve_batch.py --arch gemma3-1b --tokens 32
+
+With ``--oom`` the demo instead exercises the §V out-of-memory sampling
+path end-to-end: a power-law graph partitioned into 8 contiguous vertex
+ranges, walked through the device-resident frontier queues with only 2
+partitions resident at a time (DESIGN.md §8).
+
+    PYTHONPATH=src python examples/serve_batch.py --oom
 """
 import argparse
 import time
@@ -13,9 +20,32 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_smoke_config
-from repro.models import decode_step, init_cache, init_params
-from repro.train.train_step import make_serve_step
+
+def run_oom_demo(args) -> None:
+    """Smoke-scale out-of-memory walk: 8 partitions, 2 resident."""
+    from repro.core import algorithms as alg
+    from repro.core.oom import oom_random_walk
+    from repro.graph import powerlaw_graph
+    from repro.graph.partition import partition_by_vertex_range
+
+    g = powerlaw_graph(8192, seed=11, weighted=True)
+    parts = partition_by_vertex_range(g, 8)
+    seeds = np.random.default_rng(0).integers(0, g.num_vertices, args.batch * 32)
+    t0 = time.perf_counter()
+    walks, stats = oom_random_walk(
+        parts, g.num_vertices, seeds, jax.random.PRNGKey(0),
+        depth=args.tokens // 2, spec=alg.weighted_random_walk(),
+        max_degree=g.max_degree(), memory_capacity=2, chunk=256,
+    )
+    secs = time.perf_counter() - t0
+    done = (walks >= 0).sum(axis=1)
+    print(f"oom walk: {len(seeds)} instances x depth {args.tokens // 2} over "
+          f"{len(parts)} partitions (2 resident) in {secs*1e3:.0f} ms")
+    print(f"transfers={stats.partition_transfers} "
+          f"bytes={stats.bytes_transferred} kernels={stats.kernel_launches} "
+          f"sampled_edges={stats.sampled_edges} dropped={stats.frontier_dropped}")
+    print(f"mean walk length: {done.mean():.1f}")
+    print(f"sample walk (instance 0): {walks[0][:12].tolist()}")
 
 
 def main() -> None:
@@ -24,7 +54,17 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--oom", action="store_true",
+                    help="run the out-of-memory graph sampling demo instead")
     args = ap.parse_args()
+
+    if args.oom:
+        run_oom_demo(args)
+        return
+
+    from repro.configs import get_smoke_config
+    from repro.models import decode_step, init_cache, init_params
+    from repro.train.train_step import make_serve_step
 
     cfg = get_smoke_config(args.arch)
     params = init_params(jax.random.PRNGKey(0), cfg)

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.core import select as sel
 from repro.kernels.its_select import its_select_pallas
-from repro.kernels.walk_step import pad_csr_for_kernel, walk_step_pallas
+from repro.kernels.walk_step import _EPS, pad_csr_for_kernel, walk_step_pallas
 
 Backend = Literal["auto", "reference", "pallas"]
 
@@ -138,13 +138,20 @@ def select_with_replacement(
 # ---------------------------------------------------------------------------
 
 
-def walk_bucket_plan(max_degree: int, segs: tuple = WALK_BUCKETS) -> tuple[tuple, bool]:
+def walk_bucket_plan(
+    max_degree: int, segs: tuple = WALK_BUCKETS, exact: bool = False
+) -> tuple[tuple, bool]:
     """Static per-graph schedule: kernel segment sizes + need for chunked tail.
 
     Returns ``(buckets, use_chunked)``: one :func:`walk_step_pallas` cohort
     per bucket segment, plus the two-pass chunked scan for degrees above the
     last segment.  Buckets the graph cannot populate are dropped at trace
-    time.
+    time.  With ``exact=True`` the caller asserts ``max_degree`` is the TRUE
+    max row degree (not a possibly-understated padding bound), and the top
+    segment shrinks to the smallest multiple of the previous bucket covering
+    it (a graph with max degree 219 runs its top cohort in 256-wide windows,
+    not 512-wide) — shrinking on an understated bound would leave real hub
+    degrees with no cohort, silently killing their walkers.
     """
     buckets = []
     lo = 0
@@ -154,6 +161,10 @@ def walk_bucket_plan(max_degree: int, segs: tuple = WALK_BUCKETS) -> tuple[tuple
         lo = s
     if not buckets:
         buckets = [segs[0]]
+    if exact:
+        base = buckets[-2] if len(buckets) > 1 else LANES
+        fit = max(-(-max(max_degree, 1) // base) * base, LANES)
+        buckets[-1] = min(buckets[-1], fit)
     return tuple(buckets), max_degree > segs[-1]
 
 
@@ -216,12 +227,81 @@ def walk_step_bucketed(
         lo = seg
 
     if use_chunked:
-        huge = deg > buckets[-1]
-        safe_cur = jnp.where(huge, safe, 0)
-        off = sel.walk_transition_chunked(
-            jax.random.fold_in(key, 1), indptr, flat_bias, safe_cur, chunk=CHUNK
+        nxt = _chunked_tail(
+            jax.random.fold_in(key, 1), indptr, indices, flat_bias, safe, deg, buckets[-1], nxt
         )
-        eidx = jnp.clip(indptr[safe_cur] + jnp.maximum(off, 0), 0, indices.shape[0] - 1)
-        cand = jnp.where(off >= 0, indices[eidx], -1)
-        nxt = jnp.where(huge, cand, nxt)
+    return nxt
+
+
+def _chunked_tail(key, indptr, indices, flat_bias, safe, deg, seg_hi, nxt):
+    """Route walkers with ``deg > seg_hi`` through the two-pass chunked scan."""
+    huge = deg > seg_hi
+    safe_cur = jnp.where(huge, safe, 0)
+    off = sel.walk_transition_chunked(key, indptr, flat_bias, safe_cur, chunk=CHUNK)
+    eidx = jnp.clip(indptr[safe_cur] + jnp.maximum(off, 0), 0, indices.shape[0] - 1)
+    cand = jnp.where(off >= 0, indices[eidx], -1)
+    return jnp.where(huge, cand, nxt)
+
+
+def walk_step_flat_reference(
+    key: jax.Array,
+    indptr: jax.Array,
+    indices: jax.Array,
+    flat_bias: jax.Array,
+    padded: Mapping[int, tuple],
+    cur: jax.Array,
+    *,
+    buckets: tuple,
+    use_chunked: bool,
+    max_degree: int | None = None,
+) -> jax.Array:
+    """Pure-jnp mirror of :func:`walk_step_bucketed` — same bits, same picks.
+
+    Replays the kernel's exact arithmetic (block-aligned window at the
+    walker's ``start % seg`` offset, masked cumsum, count-crossings pick) on
+    the SAME padded edge arrays and the SAME ``fold_in(key, 0)`` /
+    ``fold_in(key, 1)`` uniforms, so the §V drain loop gets bit-identical
+    walks from ``backend="reference"`` and ``backend="pallas"`` while the
+    reference path stays kernel-free.  XLA's cumsum is position-indexed
+    (prefix ``i`` combines elements in a tree fixed by ``i`` alone), so
+    elements must sit at the kernel's window offsets — but the window TAIL
+    may be truncated: when ``max_degree`` is given the window shrinks from
+    ``2*seg`` to ``seg + min(seg, max_degree)`` without changing any prefix.
+    The selected id is gathered directly instead of through the kernel's
+    float32 one-hot reduction (identical for ids < 2^24, i.e. any graph this
+    repo can hold in f32 bias arrays).
+    """
+    safe = jnp.maximum(cur, 0)
+    starts = indptr[safe]
+    deg = jnp.where(cur >= 0, indptr[safe + 1] - starts, 0)
+    r = jax.random.uniform(jax.random.fold_in(key, 0), cur.shape, dtype=jnp.float32)
+
+    nxt = jnp.full_like(cur, -1)
+    lo = 0
+    for seg in buckets:
+        inds_p, bias_p = padded[seg]
+        inb = (deg > lo) & (deg <= seg)
+        st = jnp.where(inb, starts, 0)
+        dg = jnp.where(inb, deg, 0)
+        local = st % seg
+        width = 2 * seg if max_degree is None else seg + min(seg, max_degree)
+        blk0 = st // seg * seg
+        offs = jnp.arange(width, dtype=jnp.int32)
+        win = blk0[..., None] + offs
+        mask = (offs >= local[..., None]) & (offs < (local + dg)[..., None])
+        wts = jnp.where(mask, bias_p[win], 0.0)
+        cum = jnp.cumsum(wts, axis=-1)
+        total = cum[..., -1]
+        target = r * total
+        pick = jnp.sum(((cum <= target[..., None]) & mask).astype(jnp.int32), axis=-1)
+        pick = jnp.minimum(local + pick, local + jnp.maximum(dg - 1, 0))
+        cand = inds_p[blk0 + pick]
+        dead = (dg <= 0) | (total <= _EPS)
+        nxt = jnp.where(inb, jnp.where(dead, -1, cand), nxt)
+        lo = seg
+
+    if use_chunked:
+        nxt = _chunked_tail(
+            jax.random.fold_in(key, 1), indptr, indices, flat_bias, safe, deg, buckets[-1], nxt
+        )
     return nxt

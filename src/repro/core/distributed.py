@@ -25,7 +25,7 @@ from repro.core.api import SamplingSpec
 from repro.core import select as sel
 from repro.core.engine import WalkResult, _edge_ctx, random_walk
 from repro.graph.csr import CSRGraph
-from repro.graph.partition import partition_by_vertex_range
+from repro.graph.partition import PartitionMap, partition_by_vertex_range
 
 
 def instance_parallel_walk(
@@ -105,7 +105,8 @@ def graph_sharded_walk(
     ndev = mesh.shape[axis]
     nvert = graph.num_vertices
     indptr_s, indices_s, weights_s = shard_graph_for_mesh(graph, ndev)
-    bounds = np.linspace(0, nvert, ndev + 1).astype(np.int32)
+    # same cached bounds the partitioner used — lo/hi must match the shards
+    bounds = PartitionMap.create(nvert, ndev).bounds.astype(np.int32)
     lo = jnp.asarray(bounds[:-1])
     hi = jnp.asarray(bounds[1:])
 

@@ -33,30 +33,115 @@ def _degree(graph: CSRGraph, v: jax.Array) -> jax.Array:
     return jnp.where(v >= 0, graph.indptr[safe + 1] - graph.indptr[safe], 0)
 
 
-def _edge_ctx(graph: CSRGraph, v, prev, depth, max_degree, needs_prev_neighbors):
-    safe_v = jnp.maximum(v, 0)
-    nbrs, wts, mask = neighbors_padded(graph, safe_v, max_degree)
+def _edge_ctx(graph: CSRGraph, v, prev, depth, max_degree, needs_prev_neighbors,
+              *, partition=None):
+    """Build the EDGEBIAS context for a batch of frontier vertices.
+
+    With ``partition`` (a ``graph.partition.DevicePartition``) set, ``graph``
+    is its compact local-id CSR with a phantom sink row (DESIGN.md §8): row
+    lookups happen on localized ids while the context exposes global ids;
+    neighbors outside the partition localize to the phantom row, so their
+    ``deg_u`` is 0 — the §V semantics where only partition-resident edge
+    data informs the bias.
+    """
+    local = partition is not None
+    if local:
+        indices_global = partition.indices_global
+        vq, pq = partition.localize(v), partition.localize(prev)
+    else:
+        vq, pq = jnp.maximum(v, 0), jnp.maximum(prev, 0)
+    nbrs, wts, mask = neighbors_padded(graph, vq, max_degree)
+    nbrs_row = nbrs  # row-lookup ids (local in partition mode)
+    if local:
+        eidx = graph.indptr[vq][..., None] + jnp.arange(max_degree, dtype=jnp.int32)
+        nbrs = jnp.where(mask, indices_global[jnp.where(mask, eidx, 0)], -1)
     nbrs = jnp.where((v >= 0)[..., None] & mask, nbrs, -1)
     mask = nbrs >= 0
     ipn = None
     if needs_prev_neighbors:
-        pnbrs, _, pmask = neighbors_padded(graph, jnp.maximum(prev, 0), max_degree)
-        pnbrs = jnp.where((prev >= 0)[..., None] & pmask, pnbrs, -2)
-        # membership: u in N(prev) — O(D^2) lane-parallel compare
+        if local:
+            _, _, pmask = neighbors_padded(graph, pq, max_degree)
+            peidx = graph.indptr[pq][..., None] + jnp.arange(max_degree, dtype=jnp.int32)
+            pnbrs = jnp.where(pmask, indices_global[jnp.where(pmask, peidx, 0)], -2)
+        else:
+            pnbrs, _, pmask = neighbors_padded(graph, pq, max_degree)
+        pnbrs = jnp.where((prev >= 0)[..., None] & pmask & (pnbrs >= 0), pnbrs, -2)
+        # membership: u in N(prev) — O(D^2) lane-parallel compare (global ids)
         ipn = jnp.any(nbrs[..., :, None] == pnbrs[..., None, :], axis=-1) & mask
+    deg_u = _degree(graph, nbrs_row) if local else _degree(graph, nbrs)
     return (
         EdgeCtx(
             v=v,
             u=nbrs,
             weight=wts,
-            deg_v=_degree(graph, v),
-            deg_u=jnp.where(mask, _degree(graph, nbrs), 0),
+            deg_v=_degree(graph, vq if local else v),
+            deg_u=jnp.where(mask, deg_u, 0),
             prev=prev,
             is_prev_neighbor=ipn,
             depth=depth,
         ),
         mask,
     )
+
+
+def walk_flat_transition(key: jax.Array, graph: CSRGraph, indices_out: jax.Array,
+                         flat_bias: jax.Array, padded, v: jax.Array, prev: jax.Array,
+                         depth, spec: SamplingSpec, be: str, *,
+                         buckets: tuple, use_chunked: bool,
+                         max_degree: int | None = None, row_of=None) -> jax.Array:
+    """SELECT + UPDATE of one flat-bias walk step (shared by the in-memory
+    engine and the §V out-of-memory drain loop).
+
+    Dispatches the degree-bucketed scheduler (DESIGN.md §6): Pallas kernels
+    under ``be="pallas"``, the bit-identical pure-jnp mirror under
+    ``"reference"``.  ``row_of`` maps global vertex ids to ``graph``'s
+    row-lookup ids (identity in-memory; partition localization in the OOM
+    drain); ``indices_out`` holds the ids the walk emits (global).  Update
+    hooks receive the minimal D=1 EdgeCtx of the fast-path contract
+    (api.flat_edge_bias): only the selected edge, unit placeholder weight.
+    """
+    vq = v if row_of is None else row_of(v)
+    kf = jax.random.fold_in(key, 1)
+    if be == "pallas":
+        u = bk.walk_step_bucketed(kf, graph.indptr, indices_out, flat_bias,
+                                  padded, vq, buckets=buckets, use_chunked=use_chunked)
+    else:
+        u = bk.walk_step_flat_reference(kf, graph.indptr, indices_out, flat_bias,
+                                        padded, vq, buckets=buckets,
+                                        use_chunked=use_chunked, max_degree=max_degree)
+    alive = u >= 0
+    ctx = EdgeCtx(
+        v=v,
+        u=u[..., None],
+        weight=jnp.ones(u.shape + (1,), jnp.float32),
+        deg_v=_degree(graph, vq),
+        deg_u=_degree(graph, u if row_of is None else row_of(u))[..., None],
+        prev=prev,
+        is_prev_neighbor=None,
+        depth=depth,
+    )
+    nxt = spec.update(jax.random.fold_in(key, 2), ctx, u)
+    return jnp.where(alive, nxt, -1)
+
+
+def walk_gather_transition(key: jax.Array, ctx: EdgeCtx, mask: jax.Array,
+                           spec: SamplingSpec, be: str) -> jax.Array:
+    """SELECT + UPDATE of one gather-based walk step (shared by the in-memory
+    engine and the §V out-of-memory drain loop).
+
+    Dispatches the ITS draw through the backend (bit-identical across
+    backends for k=1, DESIGN.md §4/§6); returns next vertices, -1 for dead
+    ends and already-finished walkers.
+    """
+    biases = jnp.where(mask, spec.edge_bias(ctx), 0.0)
+    idx = bk.select_with_replacement(
+        jax.random.fold_in(key, 1), biases, mask, 1, backend=be
+    )[..., 0]
+    u = jnp.take_along_axis(ctx.u, idx[..., None], axis=-1)[..., 0]
+    alive = (ctx.v >= 0) & jnp.any(mask, axis=-1)
+    u = jnp.where(alive, u, -1)
+    nxt = spec.update(jax.random.fold_in(key, 2), ctx, u)
+    return jnp.where(alive, nxt, -1)
 
 
 class WalkResult(NamedTuple):
@@ -104,40 +189,16 @@ def random_walk(
         cur, prev = carry
         kstep = jax.random.fold_in(key, it)
         if fast_walk:
-            u = bk.walk_step_bucketed(
-                jax.random.fold_in(kstep, 1),
-                graph.indptr,
-                graph.indices,
-                flat_bias,
-                padded,
-                cur,
-                buckets=buckets,
-                use_chunked=use_chunked,
-            )
-            alive = u >= 0
-            # minimal D=1 ctx: update hooks see only the selected edge;
-            # weight is a unit placeholder (contract in api.flat_edge_bias)
-            ctx = EdgeCtx(
-                v=cur,
-                u=u[..., None],
-                weight=jnp.ones((num_inst, 1), jnp.float32),
-                deg_v=_degree(graph, cur),
-                deg_u=_degree(graph, u)[..., None],
-                prev=prev,
-                is_prev_neighbor=None,
-                depth=it,
+            # max_degree stays None: the caller's bound may be understated,
+            # and only a TRUE max degree (like the OOM drain computes) may
+            # truncate the reference mirror's windows
+            nxt = walk_flat_transition(
+                kstep, graph, graph.indices, flat_bias, padded, cur, prev, it,
+                spec, be, buckets=buckets, use_chunked=use_chunked,
             )
         else:
             ctx, mask = _edge_ctx(graph, cur, prev, it, max_degree, spec.needs_prev_neighbors)
-            biases = jnp.where(mask, spec.edge_bias(ctx), 0.0)
-            idx = bk.select_with_replacement(
-                jax.random.fold_in(kstep, 1), biases, mask, 1, backend=be
-            )[..., 0]
-            u = jnp.take_along_axis(ctx.u, idx[..., None], axis=-1)[..., 0]
-            alive = (cur >= 0) & jnp.any(mask, axis=-1)
-            u = jnp.where(alive, u, -1)
-        nxt = spec.update(jax.random.fold_in(kstep, 2), ctx, u)
-        nxt = jnp.where(alive, nxt, -1)
+            nxt = walk_gather_transition(kstep, ctx, mask, spec, be)
         return (nxt, cur), nxt
 
     (_, _), path = jax.lax.scan(step, (seeds.astype(jnp.int32), jnp.full((num_inst,), -1, jnp.int32)), jnp.arange(depth))

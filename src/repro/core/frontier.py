@@ -1,0 +1,185 @@
+"""Device-resident frontier queues for the out-of-memory scheduler (paper §V).
+
+ThunderRW-style step-interleaved execution and NextDoor-style flat frontier
+arrays share one lesson: the frontier must live on the device as fixed-shape
+arrays, not per-entry host bookkeeping.  This module provides that data
+structure — one fixed-capacity queue per graph partition, stacked as
+``(P, cap)`` arrays with a per-partition count — plus the two cursor ops the
+§V scheduler needs, both pure cumsum-compaction array programs so they trace
+into the drain loop's ``lax.scan``:
+
+- :func:`push_many` — scatter a batch of entries into the queues of their
+  owning partitions in ONE vectorized write (the cross-partition
+  redistribution step, paper Fig. 8 "insert into the owning partition's
+  queue").  Overflow past ``cap`` is dropped and counted.
+- :func:`pop_chunk` — take up to ``n`` entries off the front of one
+  partition's queue and left-compact the remainder, optionally restricted to
+  the head entry's instance (the paper's Fig. 13 per-instance baseline, i.e.
+  ``batched=False``).
+
+Entry metadata mirrors the paper's §V-C batched queue entries: vertex,
+InstanceID, CurrDepth, plus the predecessor vertex (needed by
+prev-dependent biases such as node2vec).  Empty slots hold ``-1``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FrontierQueues:
+    """Per-partition frontier queues as stacked flat device arrays.
+
+    vertex/instance/depth/prev: ``(P, cap)`` int32, ``-1`` = empty slot.
+    count: ``(P,)`` int32 — live entries per partition (always front-packed).
+    dropped: ``()`` int32 — total entries discarded to capacity overflow.
+    """
+
+    vertex: jax.Array
+    instance: jax.Array
+    depth: jax.Array
+    prev: jax.Array
+    count: jax.Array
+    dropped: jax.Array
+
+    def tree_flatten(self):
+        return (self.vertex, self.instance, self.depth, self.prev, self.count, self.dropped), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def num_partitions(self) -> int:
+        return self.vertex.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.vertex.shape[1]
+
+    def total(self) -> jax.Array:
+        return jnp.sum(self.count)
+
+
+def make_queues(num_partitions: int, capacity: int) -> FrontierQueues:
+    """Allocate empty queues: ``(P, cap)`` of -1, zero counts."""
+    empty = jnp.full((num_partitions, capacity), -1, jnp.int32)
+    return FrontierQueues(
+        vertex=empty,
+        instance=empty,
+        depth=empty,
+        prev=empty,
+        count=jnp.zeros((num_partitions,), jnp.int32),
+        dropped=jnp.zeros((), jnp.int32),
+    )
+
+
+def push_many(
+    q: FrontierQueues,
+    pid: jax.Array,
+    vertex: jax.Array,
+    instance: jax.Array,
+    depth: jax.Array,
+    prev: jax.Array,
+    valid: jax.Array,
+) -> FrontierQueues:
+    """Append ``valid`` entries to the tail of their partition's queue.
+
+    All args are flat ``(E,)`` arrays; ``pid`` names the owning partition of
+    each entry.  One cumsum over an ``(E, P)`` membership one-hot assigns
+    every entry its within-batch rank, so the whole redistribution is a
+    single scatter — no per-entry host pushes.  Entries that would land past
+    ``cap`` are dropped and counted in ``q.dropped``.
+    """
+    num_parts, cap = q.vertex.shape
+    num_entries = pid.shape[0]
+    # stable sort by owner groups valid entries per partition in batch order;
+    # gathers replace scatters throughout (XLA CPU scatter is serialized)
+    pidv = jnp.where(valid, pid, num_parts)  # invalid entries sort last
+    order = jnp.argsort(pidv)
+    adds = jnp.sum(
+        (pidv[:, None] == jnp.arange(num_parts, dtype=pidv.dtype)).astype(jnp.int32),
+        axis=0,
+    )
+    offset = jnp.cumsum(adds) - adds  # start of each partition's sorted group
+    # slot (p, s) receives sorted entry offset[p] + (s - count[p]) when that
+    # lands inside this batch's group for p; otherwise keeps its old value
+    j = jnp.arange(cap, dtype=jnp.int32)[None, :] - q.count[:, None]  # (P, cap)
+    fill = (j >= 0) & (j < adds[:, None])
+    src = order[jnp.clip(offset[:, None] + j, 0, max(num_entries - 1, 0))]
+
+    def merge(arr, vals):
+        return jnp.where(fill, vals[src], arr)
+
+    new_count = jnp.minimum(q.count + adds, cap)
+    dropped = q.dropped + jnp.sum(adds) - jnp.sum(new_count - q.count)
+    return FrontierQueues(
+        vertex=merge(q.vertex, vertex),
+        instance=merge(q.instance, instance),
+        depth=merge(q.depth, depth),
+        prev=merge(q.prev, prev),
+        count=new_count,
+        dropped=dropped,
+    )
+
+
+def pop_chunk(
+    q: FrontierQueues,
+    pid: jax.Array,
+    n: int,
+    limit: jax.Array | None = None,
+    match_head_instance: bool = False,
+):
+    """Pop up to ``n`` entries off the front of queue ``pid``.
+
+    Returns ``((vertex, instance, depth, prev), taken, queues')`` where the
+    entry arrays have static shape ``(n,)`` padded with -1 and ``taken`` is
+    the realized count.  ``limit`` (dynamic, <= n) caps the take without
+    changing shapes — the drain loop's workload-balancing budget.  With
+    ``match_head_instance`` only entries of the front entry's instance are
+    taken (paper Fig. 13 per-instance baseline).  The surviving entries are
+    left-compacted so the queue front stays at column 0.
+    """
+    cap = q.vertex.shape[1]
+    take_n = min(n, cap)
+    rows = (q.vertex[pid], q.instance[pid], q.depth[pid], q.prev[pid])
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    cnt = q.count[pid]
+    sel = idx < cnt
+    if match_head_instance:
+        sel = sel & (rows[1] == rows[1][0])
+    rank = jnp.cumsum(sel.astype(jnp.int32)) - 1
+    lim = jnp.int32(take_n) if limit is None else jnp.minimum(jnp.int32(limit), take_n)
+    take = sel & (rank < lim)
+    taken = jnp.sum(take.astype(jnp.int32))
+    # one stable sort orders [taken | surviving | empty]; everything else is
+    # gathers and a dynamic roll — no scatters (serialized on CPU XLA)
+    group = jnp.where(take, 0, jnp.where(idx < cnt, 1, 2))
+    perm = jnp.argsort(group)
+    nkeep = cnt - taken
+
+    outs = []
+    new_rows = []
+    for r in rows:
+        s = r[perm]
+        outs.append(
+            jnp.where(
+                jnp.arange(n, dtype=jnp.int32) < taken,
+                jnp.pad(s[:take_n], (0, n - take_n), constant_values=-1),
+                -1,
+            )
+        )
+        new_rows.append(jnp.where(idx < nkeep, jnp.roll(s, -taken), -1))
+    new_q = FrontierQueues(
+        vertex=q.vertex.at[pid].set(new_rows[0]),
+        instance=q.instance.at[pid].set(new_rows[1]),
+        depth=q.depth.at[pid].set(new_rows[2]),
+        prev=q.prev.at[pid].set(new_rows[3]),
+        count=q.count.at[pid].set(nkeep),
+        dropped=q.dropped,
+    )
+    return tuple(outs), taken, new_q

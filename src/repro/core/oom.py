@@ -6,38 +6,57 @@ scheduler:
 
   1. counts *active* frontier vertices per partition (paper Fig. 8 step 1),
   2. transfers the partitions with the most workload first (step 2) through a
-     double-buffered ``TransferEngine`` (the cudaMemcpyAsync analogue),
+     double-buffered ``TransferEngine`` (the cudaMemcpyAsync analogue:
+     ``prefetch`` starts the next scheduled partition's async device_put
+     while the current one drains),
   3. samples a resident partition until its frontier queue drains, inserting
      successors into the owning partition's queue (cross-partition comm),
   4. repeats until no partition has active vertices (step 3).
 
+Unlike the original host-loop implementation, the frontier is DEVICE
+RESIDENT (``core.frontier``): one fixed-capacity queue per partition stacked
+as ``(P, cap)`` flat arrays.  The per-partition drain is a single
+``lax.scan`` over fixed-size chunks inside ONE jit per (partition shape,
+spec, chunk) — partitions are padded to a common shape so every partition
+shares the same trace — and cross-partition redistribution is one vectorized
+scatter (:func:`frontier.push_many`).  Selection routes through
+``core.backend``: specs with a static ``flat_edge_bias`` take the
+degree-bucketed walk fast path (Pallas kernels on ``backend="pallas"``, the
+bit-identical pure-jnp mirror on ``"reference"``); state-dependent specs use
+the shared gather step (``engine.walk_gather_transition``).  Both backends
+consume identical RNG bits, so walks and stats agree exactly.
+
+The CPU still decides *which* partition to ship (as in the paper), but every
+scheduling decision it acts on — partition order, per-partition budgets — is
+computed on-device from the frontier counts (:func:`_plan`).
+
 Batched multi-instance sampling (§V-C) merges entries of *all* instances into
 one queue per partition (metadata: InstanceID, CurrDepth); disabling it
-processes instances one at a time — the paper's Fig. 13 baseline.
-
-Thread-block workload balancing (§V-B) becomes proportional chunk scheduling
-across co-resident partitions; per-"kernel" processed-entry counts are
-recorded so benchmarks can report the paper's Fig. 14 imbalance metric.
-
-This is a host-driven loop by necessity (the paper's is too — the CPU decides
-which partition to ship).  Device compute is jit-compiled per partition with
-fixed-size padded entry chunks.
+processes one instance's entries per chunk — the paper's Fig. 13 baseline.
+Thread-block workload balancing (§V-B) becomes proportional chunk budgets
+across co-resident partitions; per-chunk processed-entry counts are recorded
+so benchmarks can report the paper's Fig. 14 imbalance metric.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, Optional
+from typing import Callable, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import SamplingSpec
-from repro.core import select as sel
-from repro.core.engine import _edge_ctx
-from repro.graph.csr import CSRGraph
-from repro.graph.partition import RangePartition, partition_of
+from repro.core import backend as bk
+from repro.core import frontier
+from repro.core.engine import _edge_ctx, walk_flat_transition, walk_gather_transition
+from repro.graph.partition import (
+    DevicePartition,
+    PartitionMap,
+    RangePartition,
+    pid_of_device,
+)
 
 
 @dataclasses.dataclass
@@ -49,6 +68,7 @@ class OOMStats:
     kernel_launches: int = 0
     entries_per_kernel: Optional[List[int]] = None
     sampled_edges: int = 0
+    frontier_dropped: int = 0
 
     def __post_init__(self):
         if self.entries_per_kernel is None:
@@ -61,21 +81,34 @@ class OOMStats:
         return float(np.std(np.asarray(self.entries_per_kernel, dtype=np.float64)))
 
 
+class ResidentPartition(NamedTuple):
+    """A partition materialized on device, plus its spec-derived edge bias."""
+
+    dev: DevicePartition
+    flat_bias: Optional[jax.Array]  # (E_P,) CSR-order bias, fast path only
+    padded: Optional[dict]  # bucket seg -> padded (indices, bias) arrays
+
+
 class TransferEngine:
     """Double-buffered host->device partition transfers with an LRU of
     ``capacity`` resident partitions (the 'GPU memory holds k partitions'
     constraint in the paper's Fig. 8 walkthrough)."""
 
-    def __init__(self, partitions: List[RangePartition], total_vertices: int, capacity: int):
+    def __init__(
+        self,
+        partitions: List[RangePartition],
+        materialize: Callable[[RangePartition], ResidentPartition],
+        capacity: int,
+    ):
         self.partitions = partitions
-        self.total_vertices = total_vertices
-        self.capacity = capacity
-        self._resident: dict[int, CSRGraph] = {}
+        self.capacity = max(1, capacity)
+        self._materialize = materialize
+        self._resident: dict[int, ResidentPartition] = {}
         self._lru: list[int] = []
         self.stats_transfers = 0
         self.stats_bytes = 0
 
-    def fetch(self, pid: int) -> CSRGraph:
+    def fetch(self, pid: int) -> ResidentPartition:
         if pid in self._resident:
             self._lru.remove(pid)
             self._lru.append(pid)
@@ -83,72 +116,144 @@ class TransferEngine:
         if len(self._resident) >= self.capacity:
             evict = self._lru.pop(0)
             del self._resident[evict]
-        part = self.partitions[pid]
-        dev = part.to_device_csr(self.total_vertices)  # the DMA
+        res = self._materialize(self.partitions[pid])  # async DMA (device_put)
         self.stats_transfers += 1
-        self.stats_bytes += part.nbytes()
-        self._resident[pid] = dev
-        self._lru.append(pid)
-        return dev
-
-
-@functools.partial(jax.jit, static_argnames=("max_degree", "spec"))
-def _walk_step_kernel(graph: CSRGraph, cur, prev, key, *, max_degree: int, spec: SamplingSpec):
-    """One walk step for a padded chunk of queue entries (cur < 0 = padding)."""
-    ctx, mask = _edge_ctx(graph, cur, prev, jnp.zeros((), jnp.int32), max_degree, spec.needs_prev_neighbors)
-    biases = jnp.where(mask, spec.edge_bias(ctx), 0.0)
-    idx = sel.select_with_replacement(key, biases, mask, 1)[..., 0]
-    u = jnp.take_along_axis(ctx.u, idx[..., None], axis=-1)[..., 0]
-    alive = (cur >= 0) & jnp.any(mask, axis=-1)
-    u = jnp.where(alive, u, -1)
-    return spec.update(jax.random.fold_in(key, 7), ctx, u)
-
-
-@functools.partial(jax.jit, static_argnames=("max_degree", "spec", "method"))
-def _neighbor_step_kernel(graph: CSRGraph, cur, key, *, max_degree: int, spec: SamplingSpec, method: str):
-    """NeighborSize successors per entry, without replacement."""
-    prev = jnp.full_like(cur, -1)
-    ctx, mask = _edge_ctx(graph, cur, prev, jnp.zeros((), jnp.int32), max_degree, False)
-    biases = jnp.where(mask, spec.edge_bias(ctx), 0.0)
-    res = sel.select_without_replacement(key, biases, mask, spec.neighbor_size, method=method)
-    u = jnp.where(res.valid, jnp.take_along_axis(ctx.u, jnp.maximum(res.indices, 0), axis=-1), -1)
-    return jnp.where((cur >= 0)[..., None], u, -1)
-
-
-class _Queue:
-    """Per-partition frontier queue: (vertex, instance, depth, prev) arrays."""
-
-    def __init__(self):
-        self.vertex: list[int] = []
-        self.instance: list[int] = []
-        self.depth: list[int] = []
-        self.prev: list[int] = []
-
-    def push(self, v, inst, d, prev):
-        self.vertex.append(int(v))
-        self.instance.append(int(inst))
-        self.depth.append(int(d))
-        self.prev.append(int(prev))
-
-    def push_many(self, v, inst, d, prev):
-        self.vertex.extend(int(x) for x in v)
-        self.instance.extend(int(x) for x in inst)
-        self.depth.extend(int(x) for x in d)
-        self.prev.extend(int(x) for x in prev)
-
-    def pop_chunk(self, n: int):
-        n = min(n, len(self.vertex))
-        out = (
-            np.array(self.vertex[:n], np.int32),
-            np.array(self.instance[:n], np.int32),
-            np.array(self.depth[:n], np.int32),
-            np.array(self.prev[:n], np.int32),
+        # count what actually ships: the padded local CSR plus the aligned
+        # global-id edge array (not the unpadded host partition)
+        self.stats_bytes += (
+            res.dev.graph.indptr.nbytes + res.dev.graph.indices.nbytes
+            + res.dev.graph.weights.nbytes + res.dev.indices_global.nbytes
         )
-        del self.vertex[:n], self.instance[:n], self.depth[:n], self.prev[:n]
-        return out
+        self._resident[pid] = res
+        self._lru.append(pid)
+        return res
 
-    def __len__(self):
-        return len(self.vertex)
+    def prefetch(self, pid: int) -> None:
+        """Start the next scheduled partition's transfer while the current
+        one drains.  ``jax.device_put`` is asynchronous, so the DMA overlaps
+        the drain compute; no-op when capacity cannot hold both buffers."""
+        if self.capacity < 2 or pid in self._resident:
+            return
+        self.fetch(pid)
+        # keep the currently-draining partition most-recent so back-to-back
+        # prefetches never evict it
+        if len(self._lru) >= 2:
+            self._lru[-1], self._lru[-2] = self._lru[-2], self._lru[-1]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("workload_aware", "balance", "num_streams", "chunk")
+)
+def _plan(counts, *, workload_aware: bool, balance: bool, num_streams: int, chunk: int):
+    """Array-level scheduling decisions from the device frontier counts.
+
+    Returns ``(order, budgets)`` aligned with each other: the partition visit
+    order (most-loaded first under workload-aware scheduling, fixed
+    round-robin otherwise) and per-partition entry budgets (proportional to
+    queued work under balancing), zero for partitions outside this round's
+    ``num_streams`` active set.
+    """
+    num_parts = counts.shape[0]
+    order = jnp.argsort(-counts) if workload_aware else jnp.arange(num_parts)
+    oc = counts[order]
+    act = oc > 0
+    rank = jnp.cumsum(act.astype(jnp.int32)) - 1
+    is_active = act & (rank < num_streams)
+    total_active = jnp.sum(jnp.where(is_active, oc, 0))
+    if balance:
+        frac = oc.astype(jnp.float32) / jnp.maximum(total_active, 1).astype(jnp.float32)
+        budgets = jnp.maximum(
+            chunk, jnp.ceil(frac * (num_streams * chunk)).astype(jnp.int32)
+        )
+    else:
+        budgets = jnp.full((num_parts,), chunk * num_streams, jnp.int32)
+    return order, jnp.where(is_active, budgets, 0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "spec", "max_degree", "flat_max_degree", "depth", "chunk", "n_chunks",
+        "be", "batched", "fast", "buckets", "use_chunked", "range_size",
+    ),
+    # the host never reuses the pre-call queues/walks — donate them so XLA
+    # updates in place instead of copying both buffers every call (a no-op
+    # with a one-time warning on CPU, real on TPU)
+    donate_argnums=(1, 2),
+)
+def _drain(
+    part: ResidentPartition,
+    queues: frontier.FrontierQueues,
+    walks: jax.Array,
+    key: jax.Array,
+    pid: jax.Array,
+    budget: jax.Array,
+    *,
+    spec: SamplingSpec,
+    max_degree: int,
+    flat_max_degree: int,
+    depth: int,
+    chunk: int,
+    n_chunks: int,
+    be: str,
+    batched: bool,
+    fast: bool,
+    buckets: tuple,
+    use_chunked: bool,
+    range_size: int,
+):
+    """Drain up to ``budget`` entries of queue ``pid``: one ``lax.scan`` over
+    ``n_chunks`` fixed-size chunks.  Each chunk pops, takes one walk step for
+    all popped entries, scatters results into ``walks``, and redistributes
+    survivors to their owning partitions' queues in one vectorized push."""
+    dev = part.dev
+    num_parts = queues.num_partitions
+
+    def _run_chunk(carry, kstep):
+        queues, walks, sampled, budget_left = carry
+        (v, inst, d, prev), taken, queues = frontier.pop_chunk(
+            queues, pid, chunk, limit=budget_left, match_head_instance=not batched
+        )
+        if fast:
+            nxt = walk_flat_transition(
+                kstep, dev.graph, dev.indices_global, part.flat_bias,
+                part.padded, v, prev, jnp.zeros((), jnp.int32), spec, be,
+                buckets=buckets, use_chunked=use_chunked,
+                max_degree=flat_max_degree, row_of=dev.localize,
+            )
+        else:
+            ctx, mask = _edge_ctx(
+                dev.graph, v, prev, jnp.zeros((), jnp.int32), max_degree,
+                spec.needs_prev_neighbors, partition=dev,
+            )
+            nxt = walk_gather_transition(kstep, ctx, mask, spec, be)
+        ok = (nxt >= 0) & (inst >= 0)
+        # sentinel must be OOB-positive: mode="drop" WRAPS negative indices
+        num_inst = walks.shape[0]
+        walks = walks.at[jnp.where(ok, inst, num_inst), d + 1].set(nxt, mode="drop")
+        sampled = sampled + jnp.sum(ok.astype(jnp.int32))
+        cont = ok & (d + 1 < depth)
+        npid = pid_of_device(nxt, range_size, num_parts)
+        queues = frontier.push_many(queues, npid, nxt, inst, d + 1, v, cont)
+        return (queues, walks, sampled, budget_left - taken), taken
+
+    def step(carry, t):
+        # skip drained/over-budget chunks at runtime — the scan length is a
+        # static worst case, but most calls see far fewer non-empty chunks
+        has_work = (carry[0].count[pid] > 0) & (carry[3] > 0)
+        return jax.lax.cond(
+            has_work,
+            _run_chunk,
+            lambda c, _k: (c, jnp.zeros((), jnp.int32)),
+            carry,
+            jax.random.fold_in(key, t),
+        )
+
+    init = (queues, walks, jnp.zeros((), jnp.int32), jnp.int32(budget))
+    (queues, walks, sampled, _), entries = jax.lax.scan(
+        step, init, jnp.arange(n_chunks)
+    )
+    return queues, walks, sampled, entries, queues.count[pid]
 
 
 def oom_random_walk(
@@ -166,85 +271,121 @@ def oom_random_walk(
     batched: bool = True,
     workload_aware: bool = True,
     balance: bool = True,
+    backend: bk.Backend = "auto",
 ) -> tuple[np.ndarray, OOMStats]:
     """Out-of-memory random walk over host-resident partitions.
 
     Returns (walks (I, depth+1), stats).  Flags map to the paper's ablations:
     ``batched`` = §V-C, ``workload_aware`` = §V-B scheduling, ``balance`` =
-    thread-block workload balancing (proportional chunk sizing).
+    thread-block workload balancing (proportional chunk budgets).
+    ``backend`` picks the selection/walk kernels exactly as in the in-memory
+    engines; ``"pallas"`` and ``"reference"`` produce bit-identical walks and
+    stats (shared counted RNG, DESIGN.md §4/§8).
     """
     num_parts = len(partitions)
     num_inst = len(seeds)
-    walks = np.full((num_inst, depth + 1), -1, np.int32)
-    walks[:, 0] = seeds
-    queues = [_Queue() for _ in range(num_parts)]
-    pids = partition_of(seeds, total_vertices, num_parts)
-    for i, (s, p) in enumerate(zip(seeds, pids)):
-        queues[p].push(s, i, 0, -1)
+    pm = PartitionMap.create(total_vertices, num_parts)
+    be = bk.resolve_backend(backend)
+    fast = spec.flat_edge_bias is not None and not spec.needs_prev_neighbors
+    # the flat path plans buckets from the TRUE max row degree (cheap to read
+    # off the host-resident partitions): with an understated ``max_degree`` a
+    # hub walker would match no bucket and silently die, where the gather
+    # path merely truncates its neighborhood like the paper's padded gather
+    flat_md = 1
+    if fast:
+        for p in partitions:
+            if p.num_vertices:
+                flat_md = max(flat_md, int(np.diff(p.indptr).max()))
+    buckets, use_chunked = (
+        bk.walk_bucket_plan(flat_md, exact=True) if fast else ((), False)
+    )
 
-    engine = TransferEngine(partitions, total_vertices, memory_capacity)
+    seeds32 = jnp.asarray(np.asarray(seeds), jnp.int32)
+    walks = jnp.full((num_inst, depth + 1), -1, jnp.int32).at[:, 0].set(seeds32)
     stats = OOMStats()
-    kcounter = 0
+    if depth < 1 or num_inst == 0:
+        return np.asarray(walks), stats
 
-    def drain(pid: int, graph: CSRGraph, budget: int) -> int:
-        """Process up to ``budget`` entries of queue[pid]; return processed."""
-        nonlocal kcounter
-        q = queues[pid]
-        processed = 0
-        while len(q) and processed < budget:
-            take = min(chunk, budget - processed, len(q))
-            if not batched:
-                # paper Fig.13 baseline: one instance at a time
-                inst0 = q.instance[0]
-                take = 1
-                while take < min(chunk, len(q)) and q.instance[take] == inst0:
-                    take += 1
-            v, inst, d, prev = q.pop_chunk(take)
-            pad = chunk - len(v)
-            vp = np.pad(v, (0, pad), constant_values=-1)
-            pp = np.pad(prev, (0, pad), constant_values=-1)
-            kcounter += 1
-            kkey = jax.random.fold_in(key, kcounter)
-            nxt = np.asarray(
-                _walk_step_kernel(graph, jnp.asarray(vp), jnp.asarray(pp), kkey,
-                                  max_degree=max_degree, spec=spec)
-            )[: len(v)]
-            stats.kernel_launches += 1
-            stats.entries_per_kernel.append(len(v))
-            alive = nxt >= 0
-            walks[inst[alive], d[alive] + 1] = nxt[alive]
-            stats.sampled_edges += int(alive.sum())
-            cont = alive & (d + 1 < depth)
-            if cont.any():
-                npid = partition_of(nxt[cont], total_vertices, num_parts)
-                for tp in np.unique(npid):
-                    m = npid == tp
-                    queues[tp].push_many(nxt[cont][m], inst[cont][m], d[cont][m] + 1, v[cont][m])
-            processed += len(v)
-        return processed
+    cap = -(-max(chunk, num_inst) // 128) * 128
+    queues = frontier.make_queues(num_parts, cap)
+    queues = frontier.push_many(
+        queues,
+        pm.pid_of_device(seeds32),
+        seeds32,
+        jnp.arange(num_inst, dtype=jnp.int32),
+        jnp.zeros((num_inst,), jnp.int32),
+        jnp.full((num_inst,), -1, jnp.int32),
+        jnp.ones((num_inst,), bool),
+    )
 
+    # pad every partition to one common shape => one drain trace serves all
+    pad_v = pm.range_size
+    pad_e = max(p.num_edges for p in partitions)
+
+    def materialize(part: RangePartition) -> ResidentPartition:
+        dev = part.to_local_device_csr(pad_vertices=pad_v, pad_edges=pad_e)
+        if fast:
+            fb = spec.flat_edge_bias(dev.graph)
+            return ResidentPartition(dev, fb, bk.pad_walk_csr(dev.indices_global, fb, buckets))
+        return ResidentPartition(dev, None, None)
+
+    engine = TransferEngine(partitions, materialize, memory_capacity)
+    # pop width caps at 256: frontier queues rarely hold a full `chunk` of
+    # entries per partition, and denser, narrower steps beat wide padded
+    # ones; the entry budget (num_streams * chunk) is preserved via n_chunks
+    width = min(chunk, 256)
+    drain = functools.partial(
+        _drain,
+        spec=spec, max_degree=max_degree, flat_max_degree=flat_md, depth=depth,
+        chunk=width, n_chunks=-(-num_streams * chunk // width), be=be,
+        batched=batched, fast=fast, buckets=buckets, use_chunked=use_chunked,
+        range_size=pm.range_size,
+    )
+
+    call_idx = 0
     while True:
-        counts = np.array([len(q) for q in queues])
+        counts = np.asarray(jax.device_get(queues.count))
         if counts.sum() == 0:
             break
-        if workload_aware:
-            order = np.argsort(-counts)
-        else:
-            order = np.arange(num_parts)  # fixed round-robin baseline
-        active = [int(p) for p in order if counts[p] > 0][:num_streams]
-        total_active = counts[active].sum()
-        for pid in active:
-            graph = engine.fetch(pid)
-            if balance:
-                budget = max(chunk, int(np.ceil(counts[pid] / max(total_active, 1) * num_streams * chunk)))
-            else:
-                budget = chunk * num_streams
-            # paper: sample the partition until its queue has no active vertices
-            while len(queues[pid]):
-                drain(pid, graph, budget)
-                if not workload_aware:
-                    break  # baseline releases the partition after one pass
+        order, budgets = jax.device_get(
+            _plan(queues.count, workload_aware=workload_aware, balance=balance,
+                  num_streams=num_streams, chunk=chunk)
+        )
+        active = [(int(p), int(b)) for p, b in zip(order, budgets) if b > 0]
+        for i, (pid, budget) in enumerate(active):
+            part = engine.fetch(pid)
+            processed = 0
+            prefetched = False
+            # paper: workload-aware sampling holds the partition until its
+            # queue has no active vertices; the baseline releases it after
+            # one budget's worth of entries.
+            while True:
+                call_idx += 1
+                kcall = jax.random.fold_in(key, call_idx)
+                left = budget if workload_aware else budget - processed
+                queues, walks, sampled, entries, remaining = drain(
+                    part, queues, walks, kcall, jnp.int32(pid), jnp.int32(left)
+                )
+                if not prefetched and i + 1 < len(active):
+                    # double buffering: the drain above is dispatched but not
+                    # awaited — stage the next scheduled partition's transfer
+                    # while the device computes
+                    engine.prefetch(active[i + 1][0])
+                    prefetched = True
+                entries, sampled, remaining = jax.device_get(
+                    (entries, sampled, remaining)
+                )
+                nonzero = [int(e) for e in entries if e > 0]
+                stats.kernel_launches += len(nonzero)
+                stats.entries_per_kernel.extend(nonzero)
+                stats.sampled_edges += int(sampled)
+                processed += int(entries.sum())
+                if int(remaining) == 0 or not nonzero:
+                    break
+                if not workload_aware and processed >= budget:
+                    break
 
     stats.partition_transfers = engine.stats_transfers
     stats.bytes_transferred = engine.stats_bytes
-    return walks, stats
+    stats.frontier_dropped = int(jax.device_get(queues.dropped))
+    return np.asarray(walks), stats

@@ -15,6 +15,24 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def abstract_mesh(axis_names: Sequence[str], axis_sizes: Sequence[int]):
+    """Version-portable ``AbstractMesh`` constructor.
+
+    The AbstractMesh signature drifted across JAX releases — older versions
+    take ``shape_tuple`` (name, size) pairs, newer ones keyword
+    ``axis_sizes``/``axis_names`` — so spec-logic tests that only need an
+    abstract mesh construct it through this shim.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(
+            axis_sizes=tuple(axis_sizes), axis_names=tuple(axis_names)
+        )
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
 def fsdp_axes(mesh: Mesh) -> tuple:
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 

@@ -1,7 +1,13 @@
 """Graph substrate: CSR storage, generators, partitioning."""
 from repro.graph.csr import CSRGraph, csr_from_edges, degrees, neighbors_padded
 from repro.graph.generators import rmat_graph, erdos_renyi_graph, powerlaw_graph
-from repro.graph.partition import RangePartition, partition_by_vertex_range
+from repro.graph.partition import (
+    DevicePartition,
+    PartitionMap,
+    RangePartition,
+    partition_by_vertex_range,
+    partition_of,
+)
 
 __all__ = [
     "CSRGraph",
@@ -11,6 +17,9 @@ __all__ = [
     "rmat_graph",
     "erdos_renyi_graph",
     "powerlaw_graph",
+    "DevicePartition",
+    "PartitionMap",
     "RangePartition",
     "partition_by_vertex_range",
+    "partition_of",
 ]

@@ -5,16 +5,116 @@ The paper partitions by assigning a contiguous, equal range of vertices and
 edge of a vertex to be present to compute transition probabilities, and
 because range membership is decidable in O(1) (``vertex // range_size``),
 which the workload-aware scheduler relies on.
+
+Device residency uses a *compact local-id* layout (DESIGN.md §8): a resident
+partition's ``indptr`` covers only its own O(V/P) vertex range plus one
+phantom sink row, never the full vertex space — the full ``V+1`` indptr of
+the earlier layout defeated the very memory budget §V exists for.  Queue
+entries keep global vertex ids (as in the paper); the rebase offset
+``vertex_lo`` translates at the partition boundary.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+import functools
+from typing import List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.csr import CSRGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionMap:
+    """Cached contiguous-range bounds + O(1) partition lookup (paper §V-A).
+
+    ``range_size = ceil(V / P)`` and ``pid(v) = min(v // range_size, P - 1)``
+    — the paper's arithmetic membership test, with the bounds computed once
+    and cached (they used to be recomputed on every hot-path lookup).
+    """
+
+    num_vertices: int
+    num_partitions: int
+    range_size: int
+    bounds: np.ndarray  # (P+1,) int64 vertex range boundaries
+
+    @staticmethod
+    @functools.lru_cache(maxsize=128)
+    def create(num_vertices: int, num_partitions: int) -> "PartitionMap":
+        rs = -(-num_vertices // num_partitions)  # ceil
+        bounds = np.minimum(
+            np.arange(num_partitions + 1, dtype=np.int64) * rs, num_vertices
+        )
+        bounds.setflags(write=False)  # the cache shares this array
+        return PartitionMap(num_vertices, num_partitions, rs, bounds)
+
+    def pid_of(self, vertex) -> np.ndarray:
+        """O(1) host-side lookup (no searchsorted, no bound rebuild)."""
+        v = np.asarray(vertex)
+        return np.clip(v // self.range_size, 0, self.num_partitions - 1)
+
+    def pid_of_device(self, vertex: jax.Array) -> jax.Array:
+        """Same lookup as traced device arithmetic (drain-loop scatter path)."""
+        return pid_of_device(vertex, self.range_size, self.num_partitions)
+
+
+def pid_of_device(vertex: jax.Array, range_size: int, num_partitions: int) -> jax.Array:
+    """The membership formula as traced device arithmetic — the ONE home of
+    ``min(v // range_size, P - 1)`` for jitted callers (the §V drain loop's
+    cross-partition scatter and :meth:`PartitionMap.pid_of_device`)."""
+    return jnp.clip(vertex // range_size, 0, num_partitions - 1).astype(jnp.int32)
+
+
+def partition_of(vertex, num_vertices: int, num_partitions: int):
+    """O(1) partition lookup through the cached :class:`PartitionMap`."""
+    return PartitionMap.create(num_vertices, num_partitions).pid_of(vertex)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DevicePartition:
+    """Device-resident compact partition CSR (local ids + phantom sink).
+
+    ``graph`` is a local-id CSR: row ``i`` holds vertex ``vertex_lo + i``,
+    and one extra *phantom* row of degree 0 at local id ``num_local_vertices``
+    absorbs every neighbor outside the partition, so degree lookups on
+    arbitrary (localized) ids are O(V/P)-safe without the full-V indptr.
+    ``graph.indices`` therefore hold LOCAL ids; ``indices_global`` holds the
+    untranslated neighbor ids, aligned edge-for-edge, for emitting walk
+    output and cross-partition queue pushes in global id space.
+    """
+
+    graph: CSRGraph
+    indices_global: jax.Array  # (E_P,) int32 global neighbor ids
+    vertex_lo: jax.Array  # () int32 rebase offset
+    vertex_hi: jax.Array  # () int32
+
+    def tree_flatten(self):
+        return (self.graph, self.indices_global, self.vertex_lo, self.vertex_hi), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def num_local_vertices(self) -> int:
+        """Rows excluding the phantom sink (includes shape-padding rows)."""
+        return self.graph.num_vertices - 1
+
+    def localize(self, x: jax.Array) -> jax.Array:
+        """Global vertex ids -> this partition's row-lookup ids.
+
+        Ids outside the resident range (including -1 padding) map to the
+        degree-0 phantom sink row, so any localized id is safe for
+        degree/row lookups on ``graph``.  The single home of the phantom
+        convention — the §V drain and the shared edge-context builder both
+        route through here.
+        """
+        nloc = self.num_local_vertices
+        inside = (x >= self.vertex_lo) & (x < self.vertex_lo + nloc)
+        return jnp.where(inside, x - self.vertex_lo, nloc)
 
 
 @dataclasses.dataclass
@@ -38,23 +138,41 @@ class RangePartition:
     def num_edges(self) -> int:
         return int(self.indices.shape[0])
 
-    def nbytes(self) -> int:
-        return self.indptr.nbytes + self.indices.nbytes + self.weights.nbytes
+    def to_local_device_csr(
+        self,
+        pad_vertices: Optional[int] = None,
+        pad_edges: Optional[int] = None,
+    ) -> DevicePartition:
+        """Materialize the compact O(V/P + E_P) device CSR.
 
-    def to_device_csr(self, total_vertices: int) -> CSRGraph:
-        """Materialize a device CSR covering the full vertex id space.
-
-        Vertices outside [lo, hi) get empty rows so global vertex ids index
-        directly — mirrors the paper keeping global ids in partition queues.
+        ``pad_vertices`` / ``pad_edges`` round the arrays up to a common
+        shape so every partition of a graph shares ONE jit trace of the
+        drain loop; padding rows have degree 0 and padding edges weight 0,
+        both unreachable through masked semantics.  The one device_put of
+        the host staging arrays is the DMA (async on real accelerators —
+        the TransferEngine's double buffering hinges on it).
         """
-        indptr = np.zeros(total_vertices + 1, dtype=np.int32)
-        local = self.indptr.astype(np.int32)
-        indptr[self.vertex_lo + 1 : self.vertex_hi + 1] = local[1:]
-        indptr[self.vertex_hi + 1 :] = local[-1]
-        return CSRGraph(
-            indptr=jnp.asarray(indptr),
-            indices=jnp.asarray(self.indices, dtype=jnp.int32),
-            weights=jnp.asarray(self.weights, dtype=jnp.float32),
+        nv = self.num_vertices
+        pv = max(pad_vertices or nv, nv)
+        pe = max(pad_edges or self.num_edges, self.num_edges)
+        indptr = np.empty(pv + 2, dtype=np.int32)  # pv rows + phantom sink
+        indptr[: nv + 1] = self.indptr
+        indptr[nv + 1 :] = self.indptr[-1]
+        u_loc = self.indices.astype(np.int64) - self.vertex_lo
+        in_part = (u_loc >= 0) & (u_loc < nv)
+        indices_local = np.where(in_part, u_loc, pv).astype(np.int32)
+        epad = pe - self.num_edges
+        indices_local = np.pad(indices_local, (0, epad), constant_values=pv)
+        indices_global = np.pad(
+            self.indices.astype(np.int32), (0, epad), constant_values=-1
+        )
+        weights = np.pad(self.weights.astype(np.float32), (0, epad))
+        ip_d, il_d, ig_d, w_d = jax.device_put((indptr, indices_local, indices_global, weights))
+        return DevicePartition(
+            graph=CSRGraph(indptr=ip_d, indices=il_d, weights=w_d),
+            indices_global=ig_d,
+            vertex_lo=jnp.int32(self.vertex_lo),
+            vertex_hi=jnp.int32(self.vertex_hi),
         )
 
 
@@ -64,7 +182,7 @@ def partition_by_vertex_range(graph: CSRGraph, num_partitions: int) -> List[Rang
     indices = np.asarray(graph.indices)
     weights = np.asarray(graph.weights)
     n = indptr.shape[0] - 1
-    bounds = np.linspace(0, n, num_partitions + 1).astype(np.int64)
+    bounds = PartitionMap.create(n, num_partitions).bounds
     parts: List[RangePartition] = []
     for pid in range(num_partitions):
         lo, hi = int(bounds[pid]), int(bounds[pid + 1])
@@ -81,9 +199,3 @@ def partition_by_vertex_range(graph: CSRGraph, num_partitions: int) -> List[Rang
             )
         )
     return parts
-
-
-def partition_of(vertex: np.ndarray | int, num_vertices: int, num_partitions: int):
-    """O(1) partition lookup (paper's third reason for range partitioning)."""
-    bounds = np.linspace(0, num_vertices, num_partitions + 1).astype(np.int64)
-    return np.clip(np.searchsorted(bounds, np.asarray(vertex), side="right") - 1, 0, num_partitions - 1)

@@ -152,6 +152,23 @@ class TestEngineBackends:
         assert (walks[:, 1] >= 1).all() and (walks[:, 1] <= hub_deg).all()
         assert (walks[:, 2] == 0).all()  # spokes all point back at the hub
 
+    def test_walk_understated_max_degree_keeps_hub_walkers(self):
+        """Regression: the bucket plan must not shrink its top segment on the
+        caller's (possibly understated) max_degree — a deg-400 hub with
+        declared max_degree=300 must still walk on the pallas fast path.
+        (Only exact=True callers, like the OOM drain planning from the true
+        max row degree, opt into the shrink.)"""
+        hub_deg = 400
+        src = np.concatenate([np.zeros(hub_deg, int), np.arange(1, hub_deg + 1)])
+        dst = np.concatenate([np.arange(1, hub_deg + 1), np.zeros(hub_deg, int)])
+        g = csr_from_edges(hub_deg + 1, src, dst)
+        assert bk.walk_bucket_plan(300) == ((128, 512), False)
+        assert bk.walk_bucket_plan(300, exact=True) == ((128, 384), False)
+        seeds = jnp.zeros((8,), jnp.int32)
+        res = random_walk(g, seeds, KEY, depth=2, spec=alg.deepwalk(),
+                          max_degree=300, backend="pallas")
+        assert (np.asarray(res.walks)[:, 1] >= 1).all()
+
     @pytest.mark.parametrize("name", ["neighbor_unbiased", "layer", "mdrw"])
     def test_traversal_bitwise(self, graph, name):
         pools = jax.random.randint(KEY, (8, 2), 0, graph.num_vertices)

@@ -1,0 +1,135 @@
+"""Device-resident frontier queues (core.frontier, DESIGN.md §8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import frontier
+
+
+def _push(q, pid, v, inst=None, d=None, prev=None, valid=None):
+    n = len(pid)
+    pid = jnp.asarray(pid, jnp.int32)
+    v = jnp.asarray(v, jnp.int32)
+    inst = jnp.arange(n, dtype=jnp.int32) if inst is None else jnp.asarray(inst, jnp.int32)
+    d = jnp.zeros(n, jnp.int32) if d is None else jnp.asarray(d, jnp.int32)
+    prev = jnp.full((n,), -1, jnp.int32) if prev is None else jnp.asarray(prev, jnp.int32)
+    valid = jnp.ones(n, bool) if valid is None else jnp.asarray(valid, bool)
+    return frontier.push_many(q, pid, v, inst, d, prev, valid)
+
+
+class TestPushMany:
+    def test_cross_partition_scatter(self):
+        """One vectorized push distributes a mixed batch to every owner."""
+        q = frontier.make_queues(3, 8)
+        q = _push(q, pid=[0, 2, 0, 1, 2], v=[10, 20, 30, 40, 50])
+        np.testing.assert_array_equal(np.asarray(q.count), [2, 1, 2])
+        np.testing.assert_array_equal(np.asarray(q.vertex[0][:2]), [10, 30])
+        np.testing.assert_array_equal(np.asarray(q.vertex[1][:1]), [40])
+        np.testing.assert_array_equal(np.asarray(q.vertex[2][:2]), [20, 50])
+        np.testing.assert_array_equal(np.asarray(q.instance[0][:2]), [0, 2])
+        assert int(q.dropped) == 0
+
+    def test_appends_after_existing_tail(self):
+        q = frontier.make_queues(2, 8)
+        q = _push(q, pid=[0, 0], v=[1, 2])
+        q = _push(q, pid=[0, 1], v=[3, 4])
+        np.testing.assert_array_equal(np.asarray(q.vertex[0][:3]), [1, 2, 3])
+        np.testing.assert_array_equal(np.asarray(q.count), [3, 1])
+
+    def test_invalid_entries_not_pushed(self):
+        q = frontier.make_queues(2, 8)
+        q = _push(q, pid=[0, 0, 1], v=[1, 2, 3], valid=[True, False, True])
+        np.testing.assert_array_equal(np.asarray(q.count), [1, 1])
+        np.testing.assert_array_equal(np.asarray(q.vertex[0][:2]), [1, -1])
+
+    def test_overflow_dropped_and_counted(self):
+        q = frontier.make_queues(1, 4)
+        q = _push(q, pid=[0] * 6, v=list(range(6)))
+        np.testing.assert_array_equal(np.asarray(q.vertex[0]), [0, 1, 2, 3])
+        assert int(q.count[0]) == 4
+        assert int(q.dropped) == 2
+
+
+class TestPopChunk:
+    def test_fifo_and_compaction(self):
+        q = frontier.make_queues(1, 8)
+        q = _push(q, pid=[0] * 5, v=[10, 11, 12, 13, 14])
+        (v, inst, d, prev), taken, q = frontier.pop_chunk(q, jnp.int32(0), 3)
+        assert int(taken) == 3
+        np.testing.assert_array_equal(np.asarray(v), [10, 11, 12])
+        np.testing.assert_array_equal(np.asarray(inst), [0, 1, 2])
+        # remainder left-compacted to the queue front
+        np.testing.assert_array_equal(np.asarray(q.vertex[0][:3]), [13, 14, -1])
+        assert int(q.count[0]) == 2
+
+    def test_pop_pads_with_minus_one(self):
+        q = frontier.make_queues(1, 8)
+        q = _push(q, pid=[0], v=[7])
+        (v, inst, d, prev), taken, q = frontier.pop_chunk(q, jnp.int32(0), 4)
+        assert int(taken) == 1
+        np.testing.assert_array_equal(np.asarray(v), [7, -1, -1, -1])
+        np.testing.assert_array_equal(np.asarray(inst), [0, -1, -1, -1])
+        assert int(q.count[0]) == 0
+
+    def test_dynamic_limit(self):
+        """The balance budget caps the take without changing shapes."""
+        q = frontier.make_queues(1, 8)
+        q = _push(q, pid=[0] * 5, v=list(range(5)))
+        (v, *_), taken, q = frontier.pop_chunk(q, jnp.int32(0), 4, limit=jnp.int32(2))
+        assert int(taken) == 2
+        np.testing.assert_array_equal(np.asarray(v), [0, 1, -1, -1])
+        assert int(q.count[0]) == 3
+
+    def test_match_head_instance(self):
+        """Fig. 13 per-instance baseline: only the front entry's instance."""
+        q = frontier.make_queues(1, 8)
+        q = _push(q, pid=[0] * 4, v=[1, 2, 3, 4], inst=[3, 3, 5, 3])
+        (v, inst, *_), taken, q = frontier.pop_chunk(
+            q, jnp.int32(0), 8, match_head_instance=True
+        )
+        assert int(taken) == 3
+        np.testing.assert_array_equal(np.asarray(v[:3]), [1, 2, 4])
+        np.testing.assert_array_equal(np.asarray(inst[:3]), [3, 3, 3])
+        np.testing.assert_array_equal(np.asarray(q.instance[0][:2]), [5, -1])
+
+    def test_pop_targets_one_partition(self):
+        q = frontier.make_queues(3, 4)
+        q = _push(q, pid=[0, 1, 2], v=[10, 20, 30])
+        (v, *_), taken, q = frontier.pop_chunk(q, jnp.int32(1), 4)
+        assert int(taken) == 1 and int(v[0]) == 20
+        np.testing.assert_array_equal(np.asarray(q.count), [1, 0, 1])
+        np.testing.assert_array_equal(np.asarray(q.vertex[0][:1]), [10])
+        np.testing.assert_array_equal(np.asarray(q.vertex[2][:1]), [30])
+
+
+class TestUnderJit:
+    def test_roundtrip_inside_jit(self):
+        """Both ops trace into a jitted drain-style program."""
+
+        @jax.jit
+        def roundtrip(q, pid):
+            q = frontier.push_many(
+                q,
+                jnp.array([0, 1, 0], jnp.int32),
+                jnp.array([5, 6, 7], jnp.int32),
+                jnp.array([0, 1, 2], jnp.int32),
+                jnp.zeros(3, jnp.int32),
+                jnp.full((3,), -1, jnp.int32),
+                jnp.ones(3, bool),
+            )
+            out, taken, q = frontier.pop_chunk(q, pid, 2)
+            return out[0], taken, q.count
+
+        v, taken, count = roundtrip(frontier.make_queues(2, 4), jnp.int32(0))
+        np.testing.assert_array_equal(np.asarray(v), [5, 7])
+        assert int(taken) == 2
+        np.testing.assert_array_equal(np.asarray(count), [0, 1])
+
+    def test_queue_is_pytree(self):
+        q = frontier.make_queues(2, 4)
+        leaves, treedef = jax.tree_util.tree_flatten(q)
+        assert len(leaves) == 6
+        q2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert isinstance(q2, frontier.FrontierQueues)
+        assert q2.capacity == 4 and q2.num_partitions == 2

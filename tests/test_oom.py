@@ -6,7 +6,7 @@ import pytest
 from repro.core import algorithms as alg
 from repro.core.oom import oom_random_walk
 from repro.graph import powerlaw_graph
-from repro.graph.partition import partition_by_vertex_range, partition_of
+from repro.graph.partition import PartitionMap, partition_by_vertex_range, partition_of
 
 
 @pytest.fixture(scope="module")
@@ -40,15 +40,60 @@ class TestPartitioning:
         for p in parts:
             assert (pid[p.vertex_lo : p.vertex_hi] == p.pid).all()
 
-    def test_device_csr_matches_global(self, setup):
+    def test_partition_map_caches_bounds(self):
+        """The O(1) arithmetic lookup runs off cached bounds — same object
+        back for the same (V, P), no per-call bound rebuild."""
+        a = PartitionMap.create(1000, 8)
+        b = PartitionMap.create(1000, 8)
+        assert a is b
+        assert a.range_size == 125
+        np.testing.assert_array_equal(a.pid_of([0, 124, 125, 999]), [0, 0, 1, 7])
+        np.testing.assert_array_equal(
+            np.asarray(a.pid_of_device(np.array([0, 124, 125, 999]))), [0, 0, 1, 7]
+        )
+
+    def test_local_device_csr_matches_global(self, setup):
+        """Row contents survive the compact local-id materialization; global
+        neighbor ids come back through ``indices_global``."""
         g, parts, _ = setup
         ip, ind = np.asarray(g.indptr), np.asarray(g.indices)
-        dev = parts[1].to_device_csr(g.num_vertices)
-        dip, dind = np.asarray(dev.indptr), np.asarray(dev.indices)
-        for v in range(parts[1].vertex_lo, parts[1].vertex_hi):
+        part = parts[1]
+        dev = part.to_local_device_csr()
+        dip = np.asarray(dev.graph.indptr)
+        dig = np.asarray(dev.indices_global)
+        for v in range(part.vertex_lo, part.vertex_hi):
+            lv = v - part.vertex_lo
             np.testing.assert_array_equal(
-                dind[dip[v] : dip[v + 1]], ind[ip[v] : ip[v + 1]]
+                dig[dip[lv] : dip[lv + 1]], ind[ip[v] : ip[v + 1]]
             )
+
+    def test_resident_indptr_is_local_size(self, setup):
+        """§V memory budget: the resident CSR is O(V/P + E_P), NOT O(V).
+        The old layout shipped a full (total_vertices + 1) indptr per
+        resident partition, which defeated out-of-memory support."""
+        g, parts, _ = setup
+        part = parts[1]
+        dev = part.to_local_device_csr()
+        assert dev.graph.indptr.shape[0] == part.num_vertices + 2  # rows + phantom
+        assert dev.graph.indptr.shape[0] < g.num_vertices
+        assert dev.indices_global.shape[0] == part.num_edges
+
+    def test_cross_partition_neighbors_localize_to_phantom(self, setup):
+        """Neighbors outside the partition map to the degree-0 phantom sink,
+        so local degree lookups are safe for arbitrary localized ids."""
+        g, parts, _ = setup
+        part = parts[1]
+        dev = part.to_local_device_csr()
+        il = np.asarray(dev.graph.indices)
+        ig = np.asarray(dev.indices_global)
+        phantom = dev.graph.num_vertices - 1
+        outside = (ig < part.vertex_lo) | (ig >= part.vertex_hi)
+        assert outside.any()  # the fixture graph does have cross edges
+        assert (il[outside] == phantom).all()
+        inside = ~outside
+        np.testing.assert_array_equal(il[inside], ig[inside] - part.vertex_lo)
+        dip = np.asarray(dev.graph.indptr)
+        assert dip[phantom] == dip[phantom + 1]  # phantom row is empty
 
 
 class TestOOMWalk:
@@ -67,6 +112,20 @@ class TestOOMWalk:
                 assert b in ind[ip[a] : ip[a + 1]]
         assert stats.sampled_edges > 0
         assert stats.partition_transfers >= 2
+        assert stats.frontier_dropped == 0
+
+    def test_seeds_survive_padding_writes(self, setup):
+        """Regression: the walks scatter's drop sentinel must be OOB-positive
+        — JAX wraps negative scatter indices even under mode="drop", so a -1
+        sentinel for padding/dead-end entries silently overwrites the LAST
+        instance's row (invisible to the backend-parity tests, which corrupt
+        identically on both sides)."""
+        g, parts, seeds = setup
+        walks, _ = oom_random_walk(
+            parts, g.num_vertices, seeds, jax.random.PRNGKey(3), depth=8,
+            spec=alg.weighted_random_walk(), max_degree=g.max_degree(),
+            memory_capacity=2, chunk=128)
+        np.testing.assert_array_equal(walks[:, 0], seeds)
 
     def test_batching_reduces_kernel_launches(self, setup):
         """Paper Fig. 13: batched multi-instance vs per-instance."""
@@ -110,3 +169,77 @@ class TestOOMWalk:
         # should reach full depth on this connected-ish graph)
         assert (w1 >= 0).sum() > 0.9 * w1.size
         assert (w2 >= 0).sum() > 0.9 * w2.size
+
+
+class TestBackendParity:
+    """`backend="pallas"` (interpret mode off-TPU) must reproduce the
+    reference backend bit-for-bit — walks AND stats (DESIGN.md §4/§8)."""
+
+    def _stats_tuple(self, s):
+        return (
+            s.partition_transfers, s.bytes_transferred, s.kernel_launches,
+            tuple(s.entries_per_kernel), s.sampled_edges, s.frontier_dropped,
+        )
+
+    def test_flat_fast_path_bitwise(self, setup):
+        """Weighted walk takes the degree-bucketed flat_edge_bias fast path
+        on both backends (kernel vs pure-jnp mirror, same RNG bits)."""
+        g, parts, seeds = setup
+        kw = dict(depth=8, spec=alg.weighted_random_walk(),
+                  max_degree=g.max_degree(), memory_capacity=2, chunk=128)
+        w_ref, s_ref = oom_random_walk(
+            parts, g.num_vertices, seeds, jax.random.PRNGKey(5), backend="reference", **kw)
+        w_pal, s_pal = oom_random_walk(
+            parts, g.num_vertices, seeds, jax.random.PRNGKey(5), backend="pallas", **kw)
+        np.testing.assert_array_equal(w_ref, w_pal)
+        assert self._stats_tuple(s_ref) == self._stats_tuple(s_pal)
+
+    def test_gather_path_bitwise(self, setup):
+        """node2vec (prev-dependent bias) keeps the gather step; the ITS draw
+        still dispatches through the backend and stays bit-identical."""
+        g, parts, seeds = setup
+        kw = dict(depth=4, spec=alg.node2vec(), max_degree=g.max_degree(),
+                  memory_capacity=2, chunk=64)
+        w_ref, s_ref = oom_random_walk(
+            parts, g.num_vertices, seeds, jax.random.PRNGKey(6), backend="reference", **kw)
+        w_pal, s_pal = oom_random_walk(
+            parts, g.num_vertices, seeds, jax.random.PRNGKey(6), backend="pallas", **kw)
+        np.testing.assert_array_equal(w_ref, w_pal)
+        assert self._stats_tuple(s_ref) == self._stats_tuple(s_pal)
+
+    def test_understated_max_degree_still_walks_hubs(self):
+        """Regression: the flat fast path plans its degree buckets from the
+        TRUE max row degree, so a caller-understated ``max_degree`` must not
+        silently kill walkers at hubs (the gather path truncates instead) —
+        and the two backends must stay bit-identical there."""
+        from repro.graph import csr_from_edges
+
+        hub_deg = 700
+        src = np.concatenate([np.zeros(hub_deg, int), np.arange(1, hub_deg + 1)])
+        dst = np.concatenate([np.arange(1, hub_deg + 1), np.zeros(hub_deg, int)])
+        w = np.random.default_rng(0).uniform(0.1, 2.0, src.shape[0]).astype(np.float32)
+        g = csr_from_edges(hub_deg + 1, src, dst, w)
+        parts = partition_by_vertex_range(g, 4)
+        seeds = np.zeros(16, np.int64)  # all start at the hub
+        kw = dict(depth=4, spec=alg.weighted_random_walk(), max_degree=256,
+                  memory_capacity=2, chunk=64)
+        w_ref, _ = oom_random_walk(
+            parts, g.num_vertices, seeds, jax.random.PRNGKey(4), backend="reference", **kw)
+        w_pal, _ = oom_random_walk(
+            parts, g.num_vertices, seeds, jax.random.PRNGKey(4), backend="pallas", **kw)
+        assert (w_ref[:, 1] >= 1).all()  # hub walkers stepped, not killed
+        np.testing.assert_array_equal(w_ref, w_pal)
+
+    def test_flat_matches_in_memory_stationary(self, setup):
+        """The OOM deepwalk visits ∝ degree like the in-memory engine — the
+        device frontier refactor must not distort the walk distribution."""
+        g, parts, _ = setup
+        seeds = np.random.default_rng(1).integers(0, g.num_vertices, 512)
+        walks, _ = oom_random_walk(
+            parts, g.num_vertices, seeds, jax.random.PRNGKey(8), depth=20,
+            spec=alg.deepwalk(), max_degree=g.max_degree(), chunk=256)
+        last = walks[:, -1]
+        last = last[last >= 0]
+        deg = np.asarray(g.indptr[1:] - g.indptr[:-1]).astype(float)
+        visit = np.bincount(last, minlength=g.num_vertices).astype(float)
+        assert np.corrcoef(visit, deg)[0, 1] > 0.5
