@@ -1,0 +1,131 @@
+"""Walk-engine benchmark: transition programs on the fast path → BENCH_walk.json.
+
+Sweeps {deepwalk, node2vec, mhrw, rw_restart} × {reference, pallas} ×
+{in-memory, out-of-memory} on the pl50k benchmark graph, plus the
+forced-opaque node2vec configuration (transition program stripped, i.e. the
+pre-transition-program dense full-context gather) so the headline number —
+the bucketed dynamic-bias path vs the dense gather it replaced — is measured
+PR-over-PR.  On CPU the Pallas route runs in interpret mode — expect it to
+LOSE there; the cross-cutting numbers are reference-vs-reference (bucketed
+vs gather) on any host and the kernel ratio on TPU.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_walk.py [--iters 3]
+(also exposed as ``run()`` rows through benchmarks/run.py)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+
+import jax
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks.common import BENCH_GRAPHS, row, timeit  # noqa: E402
+
+from repro.core import algorithms as alg  # noqa: E402
+from repro.core.engine import random_walk  # noqa: E402
+from repro.core.oom import oom_random_walk  # noqa: E402
+from repro.graph.partition import partition_by_vertex_range  # noqa: E402
+
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_walk.json"
+
+GRAPH = "pl50k"
+WALKERS = 1024
+DEPTH = 8
+OOM_PARTS = 4
+OOM_CHUNK = 1024
+KEY = jax.random.PRNGKey(0)
+
+
+def _specs(g):
+    n2v = alg.node2vec()
+    return {
+        "deepwalk": alg.deepwalk(),
+        "node2vec": n2v,
+        # the pre-PR dense full-context gather: same hooks, program stripped
+        "node2vec_gather": dataclasses.replace(n2v, transition=None),
+        "mhrw": alg.metropolis_hastings_walk(),
+        "rw_restart": alg.random_walk_with_restart(0.15),
+    }
+
+
+def bench_inmem(g, spec, backend, iters):
+    seeds = jax.random.randint(KEY, (WALKERS,), 0, g.num_vertices)
+    md = g.max_degree()
+
+    def fn(graph, seeds, key):
+        return random_walk(
+            graph, seeds, key, depth=DEPTH, spec=spec, max_degree=md, backend=backend
+        ).walks
+
+    return timeit(fn, g, seeds, KEY, warmup=1, iters=iters)
+
+
+def bench_oom(g, spec, backend, iters):
+    parts = partition_by_vertex_range(g, OOM_PARTS)
+    seeds = np.random.default_rng(0).integers(0, g.num_vertices, WALKERS)
+    md = g.max_degree()
+
+    def fn():
+        walks, _ = oom_random_walk(
+            parts, g.num_vertices, seeds, KEY, depth=DEPTH, spec=spec,
+            max_degree=md, memory_capacity=2, chunk=OOM_CHUNK, backend=backend)
+        return walks
+
+    # oom_random_walk blocks internally (host scheduling loop)
+    return timeit(lambda: jax.numpy.asarray(fn()), warmup=1, iters=iters)
+
+
+def run(iters: int = 3):
+    g = BENCH_GRAPHS[GRAPH]()
+    on_tpu = jax.default_backend() == "tpu"
+    results = []
+    for name, spec in _specs(g).items():
+        for backend in ("reference", "pallas"):
+            for mode, bench in (("inmem", bench_inmem), ("oom", bench_oom)):
+                if name == "node2vec_gather" and mode == "oom":
+                    continue  # the dense OOM gather at pl50k degrees is pathological
+                if backend == "pallas" and mode == "oom" and not on_tpu:
+                    continue  # interpret-mode kernels in the drain loop: minutes
+                secs = bench(g, spec, backend, iters)
+                results.append({
+                    "graph": GRAPH, "algo": name, "mode": mode,
+                    "backend": backend, "seconds": secs,
+                })
+                yield row(f"walk_{name}_{mode}_{backend}", secs * 1e6,
+                          f"walkers={WALKERS};depth={DEPTH}")
+
+    by = {(r["algo"], r["mode"], r["backend"]): r["seconds"] for r in results}
+    speedup = by[("node2vec_gather", "inmem", "reference")] / by[("node2vec", "inmem", "reference")]
+    results.append({
+        "graph": GRAPH, "algo": "node2vec", "mode": "inmem",
+        "derived": "bucketed_vs_gather_speedup_reference", "speedup": speedup,
+    })
+    yield row("walk_node2vec_bucketed_vs_gather", 0.0, f"speedup={speedup:.2f}x")
+
+    OUT_PATH.write_text(json.dumps({
+        # shared benchmark-JSON schema (DESIGN.md §9): diffable PR-over-PR
+        "bench": "walk",
+        "device": jax.default_backend(),
+        "pallas_interpret": not on_tpu,
+        "graph": GRAPH, "walkers": WALKERS, "depth": DEPTH,
+        "results": results,
+    }, indent=2))
+    yield row("walk_json", 0.0, str(OUT_PATH.name))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for r in run(args.iters):
+        print(r, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (  # noqa: PLC0415
+        bench_walk,
         fig09_seps,
         fig10_inmem,
         fig13_oom,
@@ -31,6 +32,7 @@ def main() -> None:
         "fig16": fig16_sweep,
         "fig17": fig17_scaling,
         "roofline": roofline,
+        "walk": bench_walk,  # transition programs; writes BENCH_walk.json
     }
     keys = args.only.split(",") if args.only else list(modules)
     print("name,us_per_call,derived")

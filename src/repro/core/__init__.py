@@ -27,7 +27,18 @@ from repro.core.select import (
 from repro.core.engine import SampleResult, WalkResult, random_walk, traversal_sample
 from repro.core import algorithms
 from repro.core import backend
+from repro.core import transition
 from repro.core.backend import resolve_backend
+from repro.core.transition import (
+    FlatBias,
+    IdentityEpilogue,
+    MHAcceptEpilogue,
+    OpaqueBias,
+    OpaqueEpilogue,
+    TeleportEpilogue,
+    TransitionProgram,
+    WindowBias,
+)
 
 __all__ = [
     "EdgeCtx",
@@ -51,4 +62,13 @@ __all__ = [
     "algorithms",
     "backend",
     "resolve_backend",
+    "transition",
+    "TransitionProgram",
+    "FlatBias",
+    "WindowBias",
+    "OpaqueBias",
+    "IdentityEpilogue",
+    "MHAcceptEpilogue",
+    "TeleportEpilogue",
+    "OpaqueEpilogue",
 ]

@@ -19,6 +19,13 @@ from repro.core.api import (
     uniform_vertex_bias,
     weight_edge_bias,
 )
+from repro.core.transition import (
+    FlatBias,
+    MHAcceptEpilogue,
+    TeleportEpilogue,
+    TransitionProgram,
+    WindowBias,
+)
 
 # ---------------------------------------------------------------------------
 # Random walks (NeighborSize = 1 per step)
@@ -45,6 +52,7 @@ def deepwalk() -> SamplingSpec:
     return SamplingSpec(
         edge_bias=uniform_edge_bias,
         flat_edge_bias=_flat_uniform,
+        transition=TransitionProgram(bias=FlatBias(_flat_uniform)),
         name="deepwalk",
         track_visited=False,
     )
@@ -55,6 +63,7 @@ def biased_random_walk() -> SamplingSpec:
     return SamplingSpec(
         edge_bias=degree_edge_bias,
         flat_edge_bias=_flat_degree,
+        transition=TransitionProgram(bias=FlatBias(_flat_degree)),
         name="biased_rw",
         track_visited=False,
     )
@@ -65,13 +74,20 @@ def weighted_random_walk() -> SamplingSpec:
     return SamplingSpec(
         edge_bias=weight_edge_bias,
         flat_edge_bias=_flat_weight,
+        transition=TransitionProgram(bias=FlatBias(_flat_weight)),
         name="weighted_rw",
         track_visited=False,
     )
 
 
 def node2vec(p: float = 2.0, q: float = 0.5) -> SamplingSpec:
-    """Dynamic bias from the previous step (paper Fig. 3(a))."""
+    """Dynamic bias from the previous step (paper Fig. 3(a)).
+
+    The bias reads only per-edge context (u, weight, is-prev-neighbor) and
+    the carried prev vertex, so it declares a :class:`WindowBias` and runs
+    degree-bucketed on the kernel's gathered edge windows — never on the
+    dense ``(W, max_degree)`` gather.
+    """
 
     def edge_bias(ctx: EdgeCtx) -> jax.Array:
         w = ctx.weight
@@ -83,7 +99,16 @@ def node2vec(p: float = 2.0, q: float = 0.5) -> SamplingSpec:
         return jnp.where(first_step, w, bias)
 
     return SamplingSpec(
-        edge_bias=edge_bias, needs_prev_neighbors=True, name="node2vec", track_visited=False
+        edge_bias=edge_bias,
+        needs_prev_neighbors=True,
+        transition=TransitionProgram(
+            bias=WindowBias(
+                edge_bias, needs_prev_neighbors=True,
+                needs_deg_u=False,  # bias reads weights/membership only
+            )
+        ),
+        name="node2vec",
+        track_visited=False,
     )
 
 
@@ -100,6 +125,9 @@ def metropolis_hastings_walk() -> SamplingSpec:
         edge_bias=uniform_edge_bias,
         flat_edge_bias=_flat_uniform,
         update=update,
+        transition=TransitionProgram(
+            bias=FlatBias(_flat_uniform), epilogue=MHAcceptEpilogue()
+        ),
         name="mhrw",
         track_visited=False,
     )
@@ -118,22 +146,39 @@ def random_walk_with_jump(jump_prob: float, num_vertices: int) -> SamplingSpec:
         edge_bias=uniform_edge_bias,
         flat_edge_bias=_flat_uniform,
         update=update,
+        transition=TransitionProgram(
+            bias=FlatBias(_flat_uniform),
+            epilogue=TeleportEpilogue(jump_prob, "uniform", num_vertices=num_vertices),
+        ),
         name="rw_jump",
         track_visited=False,
     )
 
 
-def random_walk_with_restart(restart_prob: float, home: int) -> SamplingSpec:
-    """Jump back to a predetermined vertex with probability ``restart_prob``."""
+def random_walk_with_restart(restart_prob: float, home: int | None = None) -> SamplingSpec:
+    """Restart with probability ``restart_prob``: to the predetermined vertex
+    ``home``, or (``home=None``) to the walk's own seed — the engines carry
+    the per-instance home vertex as transition-program state."""
 
     def update(key: jax.Array, ctx: EdgeCtx, u: jax.Array) -> jax.Array:
+        if home is None:
+            raise NotImplementedError(
+                "restart-to-seed needs the engines' home carry; use the "
+                "transition-program path (spec.transition), not the raw hook"
+            )
         restart = jax.random.uniform(key, u.shape) < restart_prob
         return jnp.where(restart, jnp.full_like(u, home), u)
 
+    epilogue = (
+        TeleportEpilogue(restart_prob, "home")
+        if home is None
+        else TeleportEpilogue(restart_prob, "fixed", vertex=home)
+    )
     return SamplingSpec(
         edge_bias=uniform_edge_bias,
         flat_edge_bias=_flat_uniform,
         update=update,
+        transition=TransitionProgram(bias=FlatBias(_flat_uniform), epilogue=epilogue),
         name="rw_restart",
         track_visited=False,
     )

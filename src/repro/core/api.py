@@ -10,6 +10,13 @@ batched (arrays carry leading instance dims) and jit-traceable:
 
 Everything else — CTPS construction, ITS selection, BRS collision handling,
 frontier queues, partitioning, multi-device — is the framework's job.
+
+Specs may additionally *declare* what their hooks consume as a
+``core.transition.TransitionProgram`` (``transition=`` field): the engines
+dispatch on the lowered program, compiling flat and window biases plus
+declarative update epilogues onto the degree-bucketed fast path
+(DESIGN.md §10) instead of interpreting opaque callables through the dense
+full-context gather.
 """
 from __future__ import annotations
 
@@ -111,4 +118,13 @@ class SamplingSpec:
     # gathered) — update hooks that read ``ctx.weight`` must leave
     # flat_edge_bias unset to stay on the full-context path.
     flat_edge_bias: Optional[FlatEdgeBiasFn] = None
+    # Declared transition program (``core.transition.TransitionProgram``):
+    # the declarative lowering of the hooks above.  When set it takes
+    # precedence over the legacy flags — ``core.transition.lower`` dispatches
+    # the engines on it (flat/window biases run the degree-bucketed fast
+    # path on every backend; declarative epilogues fuse into the shared
+    # post-select step).  None ⇒ inferred from the legacy fields.  Typed as
+    # ``object`` only to avoid a circular import; it must be a
+    # TransitionProgram (or None).
+    transition: Optional[object] = None
     name: str = "custom"

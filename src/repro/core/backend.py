@@ -27,8 +27,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import select as sel
+from repro.kernels import ref
 from repro.kernels.its_select import its_select_pallas
-from repro.kernels.walk_step import _EPS, pad_csr_for_kernel, walk_step_pallas
+from repro.kernels.walk_step import (
+    _EPS,
+    pad_csr_for_kernel,
+    walk_step_pallas,
+    walk_step_window_pallas,
+)
 
 Backend = Literal["auto", "reference", "pallas"]
 
@@ -211,12 +217,17 @@ def walk_step_bucketed(
 
     nxt = jnp.full_like(cur, -1)
     lo = 0
-    for seg in buckets:
+    for i, seg in enumerate(buckets):
         inds_p, bias_p = padded[seg]
-        inb = (deg > lo) & (deg <= seg)
+        # understated max_degree degrades to NEIGHBORHOOD TRUNCATION (the
+        # dense-gather contract), never silent walker death: without a
+        # chunked tail the top cohort absorbs any larger degree, capped at
+        # its window (same policy as the window scheduler below)
+        absorb = i == len(buckets) - 1 and not use_chunked
+        inb = (deg > lo) & ((deg <= seg) | absorb)
         cand = walk_step_pallas(
             jnp.where(inb, starts, 0),
-            jnp.where(inb, deg, 0),
+            jnp.where(inb, jnp.minimum(deg, seg), 0),
             inds_p,
             bias_p,
             r,
@@ -278,30 +289,139 @@ def walk_step_flat_reference(
 
     nxt = jnp.full_like(cur, -1)
     lo = 0
-    for seg in buckets:
+    for i, seg in enumerate(buckets):
         inds_p, bias_p = padded[seg]
-        inb = (deg > lo) & (deg <= seg)
-        st = jnp.where(inb, starts, 0)
-        dg = jnp.where(inb, deg, 0)
-        local = st % seg
+        # same truncation-absorb policy as walk_step_bucketed — the two must
+        # mirror each other bit-for-bit
+        absorb = i == len(buckets) - 1 and not use_chunked
+        inb = (deg > lo) & ((deg <= seg) | absorb)
         width = 2 * seg if max_degree is None else seg + min(seg, max_degree)
-        blk0 = st // seg * seg
-        offs = jnp.arange(width, dtype=jnp.int32)
-        win = blk0[..., None] + offs
-        mask = (offs >= local[..., None]) & (offs < (local + dg)[..., None])
-        wts = jnp.where(mask, bias_p[win], 0.0)
-        cum = jnp.cumsum(wts, axis=-1)
-        total = cum[..., -1]
-        target = r * total
-        pick = jnp.sum(((cum <= target[..., None]) & mask).astype(jnp.int32), axis=-1)
-        pick = jnp.minimum(local + pick, local + jnp.maximum(dg - 1, 0))
-        cand = inds_p[blk0 + pick]
-        dead = (dg <= 0) | (total <= _EPS)
-        nxt = jnp.where(inb, jnp.where(dead, -1, cand), nxt)
+        cand = ref.walk_step_block_ref(
+            jnp.where(inb, starts, 0), jnp.where(inb, jnp.minimum(deg, seg), 0),
+            inds_p, bias_p, r, seg=seg, width=width,
+        )
+        nxt = jnp.where(inb, cand, nxt)
         lo = seg
 
     if use_chunked:
         nxt = _chunked_tail(
             jax.random.fold_in(key, 1), indptr, indices, flat_bias, safe, deg, buckets[-1], nxt
         )
+    return nxt
+
+
+# ---------------------------------------------------------------------------
+# Degree-bucketed WINDOW-bias walk scheduling (transition programs, §10)
+# ---------------------------------------------------------------------------
+
+
+def walk_bucket_plan_window(max_degree: int, segs: tuple = WALK_BUCKETS) -> tuple[tuple, bool]:
+    """Bucket plan for the window-bias path: exact, and ladder-merged.
+
+    Window biases are *evaluated* per cohort, so every extra bucket re-runs
+    the dynamic hook (and its prev-membership search) over all walkers at
+    that cohort's width — a small bucket only pays for itself when the top
+    segment is much wider.  Plan exactly (the window path treats
+    ``max_degree`` as the true max row degree, like the OOM drain), then
+    collapse the ladder into the top cohort when it is at most twice the
+    bottom one.  Degrees above the top segment take the chunked dynamic
+    tail.
+    """
+    buckets, use_chunked = walk_bucket_plan(max_degree, segs, exact=True)
+    if len(buckets) > 1 and buckets[-1] <= 2 * buckets[0]:
+        buckets = buckets[-1:]
+    return tuple(buckets), use_chunked
+
+
+def walk_step_bucketed_window(
+    key: jax.Array,
+    indptr: jax.Array,
+    indices: jax.Array,
+    weights: jax.Array,
+    padded: Mapping[int, tuple],
+    cur: jax.Array,
+    bias_of,
+    *,
+    buckets: tuple,
+    use_chunked: bool,
+    backend: str,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One dynamic-bias transition for all walkers, scheduled by degree.
+
+    The ``WindowBias`` analogue of :func:`walk_step_bucketed` /
+    :func:`walk_step_flat_reference` — ONE function serves both backends
+    because the expensive, semantics-bearing part (evaluating the dynamic
+    edge-bias hook) runs in shared jnp either way:
+
+    per bucket, each walker's *compact* ``(W, seg)`` row window is gathered
+    from the padded CSR arrays (``padded[seg] = (ids, weights)``,
+    :func:`pad_walk_csr` over edge WEIGHTS, not a flat bias) and
+    ``bias_of(u, w, mask) -> biases`` is evaluated on it — the narrowest
+    arrays the hook (and its prev-membership search) can see.  The computed
+    bias is then re-aligned into the kernel's block-aligned ``(W, 2·seg)``
+    window (one cheap row-local gather; per-edge bias values are unchanged)
+    and the ITS pick runs
+    :func:`~repro.kernels.walk_step.walk_step_window_pallas` under
+    ``backend="pallas"`` or the bit-identical
+    :func:`~repro.kernels.ref.walk_step_window_block_ref` mirror under
+    ``"reference"`` — same bias rows, same uniforms, same picks.
+
+    Degrees above the last bucket take the two-pass chunked scan
+    (:func:`~repro.core.select.walk_transition_chunked_window`), evaluating
+    the hook chunk-by-chunk — no ``(W, max_degree)`` tensor exists on any
+    path.  Returns next vertices (W,) int32; -1 for finished walkers and
+    dead ends.
+    """
+    safe = jnp.maximum(cur, 0)
+    starts = indptr[safe]
+    deg = jnp.where(cur >= 0, indptr[safe + 1] - starts, 0)
+    r = jax.random.uniform(jax.random.fold_in(key, 0), cur.shape, dtype=jnp.float32)
+
+    nxt = jnp.full_like(cur, -1)
+    lo = 0
+    for i, seg in enumerate(buckets):
+        inds_p, wts_p = padded[seg]
+        # an understated max_degree (possible in-memory, where the caller's
+        # bound is trusted for the exact bucket plan) degrades to
+        # NEIGHBORHOOD TRUNCATION — the dense-gather path's contract — never
+        # silent walker death: without a chunked tail the top cohort absorbs
+        # any larger degree, capped at its window
+        absorb = i == len(buckets) - 1 and not use_chunked
+        inb = (deg > lo) & ((deg <= seg) | absorb)
+        st = jnp.where(inb, starts, 0)
+        dg = jnp.where(inb, jnp.minimum(deg, seg), 0)
+        # compact row-aligned windows for the hook (row fits: dg <= seg, and
+        # the padded arrays keep a spare trailing block, so st+seg is safe)
+        offs_c = jnp.arange(seg, dtype=jnp.int32)
+        cmask = offs_c < dg[..., None]
+        ceidx = st[..., None] + offs_c
+        u_c = jnp.where(cmask, inds_p[ceidx], -1)
+        w_c = jnp.where(cmask, wts_p[ceidx], 0.0)
+        bias_c = jnp.where(cmask, jnp.maximum(bias_of(u_c, w_c, cmask), 0.0), 0.0)
+        # re-align to the kernel's 2-block window at offset start % seg
+        # (same geometry the reference pick uses — shared helper keeps the
+        # bit-parity contract in one place)
+        local, _, offs, mask = ref._block_window(st, dg, seg, 2 * seg)
+        src = jnp.clip(offs - local[..., None], 0, seg - 1)
+        bias_win = jnp.where(mask, jnp.take_along_axis(bias_c, src, axis=-1), 0.0)
+        if backend == "pallas":
+            cand = walk_step_window_pallas(
+                st, dg, inds_p, bias_win, r, max_seg=seg, interpret=interpret
+            )
+        else:
+            cand = ref.walk_step_window_block_ref(st, dg, inds_p, bias_win, r, seg=seg)
+        nxt = jnp.where(inb, cand, nxt)
+        lo = seg
+
+    if use_chunked:
+        huge = deg > buckets[-1]
+        safe_cur = jnp.where(huge, safe, 0)
+        off = sel.walk_transition_chunked_window(
+            jax.random.fold_in(key, 1), indptr, indices, weights, safe_cur, bias_of,
+            chunk=CHUNK,
+        )
+        eidx = jnp.clip(indptr[safe_cur] + jnp.maximum(off, 0), 0, indices.shape[0] - 1)
+        cand = jnp.where(off >= 0, indices[eidx], -1)
+        nxt = jnp.where(huge, cand, nxt)
     return nxt

@@ -23,9 +23,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.api import SamplingSpec
 from repro.core import select as sel
+from repro.core import transition as tp
 from repro.core.engine import WalkResult, _edge_ctx, random_walk
+from repro.distributed.sharding import shard_map_compat
 from repro.graph.csr import CSRGraph
 from repro.graph.partition import PartitionMap, partition_by_vertex_range
+
+
 
 
 def instance_parallel_walk(
@@ -42,11 +46,10 @@ def instance_parallel_walk(
     """Shard instances over ``axis``; replicate the graph; zero collectives."""
 
     @functools.partial(
-        jax.shard_map,
+        shard_map_compat,
         mesh=mesh,
         in_specs=(P(), P(axis), P()),
         out_specs=WalkResult(P(axis), P(axis), P()),
-        check_vma=False,
     )
     def _run(graph, seeds, key):
         # fold in the device index so instance groups draw independent randoms
@@ -104,6 +107,7 @@ def graph_sharded_walk(
     """
     ndev = mesh.shape[axis]
     nvert = graph.num_vertices
+    program = tp.lower(spec)
     indptr_s, indices_s, weights_s = shard_graph_for_mesh(graph, ndev)
     # same cached bounds the partitioner used — lo/hi must match the shards
     bounds = PartitionMap.create(nvert, ndev).bounds.astype(np.int32)
@@ -111,15 +115,15 @@ def graph_sharded_walk(
     hi = jnp.asarray(bounds[1:])
 
     @functools.partial(
-        jax.shard_map,
+        shard_map_compat,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(), P()),
         out_specs=P(),
-        check_vma=False,
     )
     def _run(indptr, indices, wts, lo, hi, seeds, key):
         local = CSRGraph(indptr[0], indices[0], wts[0])
         lo0, hi0 = lo[0], hi[0]
+        home = seeds.astype(jnp.int32) if program.carries_home else None
 
         def step(carry, it):
             cur, prev = carry
@@ -131,7 +135,15 @@ def graph_sharded_walk(
             idx = sel.select_with_replacement(jax.random.fold_in(kstep, 1), biases, mask, 1)[..., 0]
             u = jnp.take_along_axis(ctx.u, idx[..., None], axis=-1)[..., 0]
             alive = own & (cur >= 0) & jnp.any(mask, axis=-1)
-            u = jnp.where(alive, spec.update(jax.random.fold_in(kstep, 2), ctx, u), -1)
+            # post-select update through the lowered epilogue (shared with
+            # the in-memory engines and the OOM drain, DESIGN.md §10)
+            u = jnp.where(
+                alive,
+                tp.apply_epilogue(
+                    jax.random.fold_in(kstep, 2), program, spec, ctx, u, home
+                ),
+                -1,
+            )
             contrib = jnp.where(own, jnp.where(alive, u, -1), 0)
             dead = jax.lax.psum(jnp.where(own, jnp.where(alive, 0, 1), 0), axis)
             nxt = jax.lax.psum(contrib, axis)  # exactly one owner contributes

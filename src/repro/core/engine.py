@@ -10,9 +10,13 @@ Two drivers, both batched over thousands of concurrent instances
 Both are jit-compiled, use counted RNG, fixed shapes, masked semantics, and
 route all bias-based selection through the backend dispatcher
 (``core.backend``), so they run unchanged under vmap / shard_map / the
-partition scheduler.  ``backend="pallas"`` swaps in the fused Pallas
-selection kernels and the degree-bucketed walk scheduler; ``"reference"``
-keeps everything in pure jnp; ``"auto"`` picks per device (DESIGN.md §6).
+partition scheduler.  Walk steps dispatch on the spec's lowered transition
+program (``core.transition``, DESIGN.md §10): flat- and window-bias
+programs run the degree-bucketed scheduler on BOTH backends —
+``backend="pallas"`` swaps in the fused Pallas kernels, ``"reference"``
+their bit-identical pure-jnp mirrors — and declarative epilogues fuse into
+one shared post-select step; only opaque programs keep the dense gather.
+``"auto"`` picks per device (DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -25,6 +29,7 @@ import jax.numpy as jnp
 from repro.core.api import EdgeCtx, SamplingSpec, VertexCtx
 from repro.core import backend as bk
 from repro.core import select as sel
+from repro.core import transition as tp
 from repro.graph.csr import CSRGraph, neighbors_padded
 
 
@@ -84,31 +89,13 @@ def _edge_ctx(graph: CSRGraph, v, prev, depth, max_degree, needs_prev_neighbors,
     )
 
 
-def walk_flat_transition(key: jax.Array, graph: CSRGraph, indices_out: jax.Array,
-                         flat_bias: jax.Array, padded, v: jax.Array, prev: jax.Array,
-                         depth, spec: SamplingSpec, be: str, *,
-                         buckets: tuple, use_chunked: bool,
-                         max_degree: int | None = None, row_of=None) -> jax.Array:
-    """SELECT + UPDATE of one flat-bias walk step (shared by the in-memory
-    engine and the §V out-of-memory drain loop).
-
-    Dispatches the degree-bucketed scheduler (DESIGN.md §6): Pallas kernels
-    under ``be="pallas"``, the bit-identical pure-jnp mirror under
-    ``"reference"``.  ``row_of`` maps global vertex ids to ``graph``'s
-    row-lookup ids (identity in-memory; partition localization in the OOM
-    drain); ``indices_out`` holds the ids the walk emits (global).  Update
-    hooks receive the minimal D=1 EdgeCtx of the fast-path contract
-    (api.flat_edge_bias): only the selected edge, unit placeholder weight.
-    """
-    vq = v if row_of is None else row_of(v)
-    kf = jax.random.fold_in(key, 1)
-    if be == "pallas":
-        u = bk.walk_step_bucketed(kf, graph.indptr, indices_out, flat_bias,
-                                  padded, vq, buckets=buckets, use_chunked=use_chunked)
-    else:
-        u = bk.walk_step_flat_reference(kf, graph.indptr, indices_out, flat_bias,
-                                        padded, vq, buckets=buckets,
-                                        use_chunked=use_chunked, max_degree=max_degree)
+def _select_epilogue(key, graph, program, spec, v, prev, depth, u, vq, row_of, home):
+    """Fused post-select step shared by the flat and window fast paths:
+    build the minimal D=1 EdgeCtx of the selected edge and run the lowered
+    epilogue (``transition.apply_epilogue`` — identity/MH/teleport fuse into
+    a few jnp ops; opaque falls back to ``spec.update``).  The minimal ctx
+    carries a unit placeholder ``weight`` (fast-path contract,
+    api.flat_edge_bias)."""
     alive = u >= 0
     ctx = EdgeCtx(
         v=v,
@@ -120,19 +107,155 @@ def walk_flat_transition(key: jax.Array, graph: CSRGraph, indices_out: jax.Array
         is_prev_neighbor=None,
         depth=depth,
     )
-    nxt = spec.update(jax.random.fold_in(key, 2), ctx, u)
+    nxt = tp.apply_epilogue(jax.random.fold_in(key, 2), program, spec, ctx, u, home)
     return jnp.where(alive, nxt, -1)
 
 
-def walk_gather_transition(key: jax.Array, ctx: EdgeCtx, mask: jax.Array,
-                           spec: SamplingSpec, be: str) -> jax.Array:
-    """SELECT + UPDATE of one gather-based walk step (shared by the in-memory
+def walk_flat_transition(key: jax.Array, graph: CSRGraph, indices_out: jax.Array,
+                         flat_bias: jax.Array, padded, v: jax.Array, prev: jax.Array,
+                         depth, spec: SamplingSpec, be: str, *,
+                         buckets: tuple, use_chunked: bool,
+                         max_degree: int | None = None, row_of=None,
+                         program: tp.TransitionProgram | None = None,
+                         home: jax.Array | None = None) -> jax.Array:
+    """SELECT + epilogue of one flat-bias walk step (shared by the in-memory
     engine and the §V out-of-memory drain loop).
+
+    Dispatches the degree-bucketed scheduler (DESIGN.md §6): Pallas kernels
+    under ``be="pallas"``, the bit-identical pure-jnp mirror under
+    ``"reference"``.  ``row_of`` maps global vertex ids to ``graph``'s
+    row-lookup ids (identity in-memory; partition localization in the OOM
+    drain); ``indices_out`` holds the ids the walk emits (global).  The
+    post-select update runs the spec's lowered transition-program epilogue.
+    """
+    program = tp.lower(spec) if program is None else program
+    vq = v if row_of is None else row_of(v)
+    kf = jax.random.fold_in(key, 1)
+    if be == "pallas":
+        u = bk.walk_step_bucketed(kf, graph.indptr, indices_out, flat_bias,
+                                  padded, vq, buckets=buckets, use_chunked=use_chunked)
+    else:
+        u = bk.walk_step_flat_reference(kf, graph.indptr, indices_out, flat_bias,
+                                        padded, vq, buckets=buckets,
+                                        use_chunked=use_chunked, max_degree=max_degree)
+    return _select_epilogue(key, graph, program, spec, v, prev, depth, u, vq, row_of, home)
+
+
+def _is_prev_neighbor_window(indptr, ids_sorted, prow, prev, u, mask, *, steps: int):
+    """Membership of window candidates in N(prev): per-candidate lower-bound
+    binary search over prev's sorted CSR row (``csr_from_edges`` sorts rows;
+    partition localization preserves the order).  O(D·log deg_prev) — the
+    windowed replacement for the dense path's O(D²) lane compare — and exact
+    for ANY prev degree (the dense path truncates N(prev) at max_degree).
+
+    prow: (W,) row-lookup ids of prev (localized in partition mode);
+    u: (W, D) candidate GLOBAL ids; returns (W, D) bool.
+
+    ``steps`` is sized from the caller's max-degree bound.  If that bound is
+    understated, the search may not converge on longer prev rows — which can
+    only produce false NEGATIVES (``lo`` always lands inside the row, so a
+    positive requires a genuine element match): the same truncation-class
+    degradation as the dense path's ``neighbors_padded`` cap on N(prev).
+    """
+    e = ids_sorted.shape[0]
+    lo = jnp.broadcast_to(indptr[prow][..., None], u.shape).astype(jnp.int32)
+    hi_row = indptr[prow + 1][..., None]
+    hi = jnp.broadcast_to(hi_row, u.shape).astype(jnp.int32)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        open_ = lo < hi
+        mid = (lo + hi) // 2
+        vmid = ids_sorted[jnp.clip(mid, 0, e - 1)]
+        go_right = vmid < u
+        lo = jnp.where(open_ & go_right, mid + 1, lo)
+        hi = jnp.where(open_ & ~go_right, mid, hi)
+        return lo, hi
+
+    lo, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    found = (lo < hi_row) & (ids_sorted[jnp.clip(lo, 0, e - 1)] == u)
+    return found & mask & (prev >= 0)[..., None] & (u >= 0)
+
+
+def _window_bias_fn(graph: CSRGraph, program: tp.TransitionProgram,
+                    v, prev, depth, row_of, ids_sorted,
+                    max_degree: int | None = None):
+    """Close the spec's dynamic edge-bias hook over the walker state so the
+    backend scheduler can evaluate it on any gathered edge window.
+
+    The returned ``bias_of(u, w, mask)`` builds a window EdgeCtx — candidate
+    ids/weights straight off the CSR window, degrees by row lookup
+    (localized in partition mode, so non-resident neighbors read deg 0 off
+    the phantom row, §V semantics), prev-membership by binary search — and
+    runs ``WindowBias.fn`` on it.
+    """
+    wb = program.bias
+    assert isinstance(wb, tp.WindowBias), wb
+    vq = v if row_of is None else row_of(v)
+    pq = jnp.maximum(prev, 0) if row_of is None else row_of(prev)
+    deg_v = _degree(graph, vq)
+    # lower-bound halvings: enough for the longest row (``max_degree`` is the
+    # true max row degree on this path), else for the whole edge array
+    bound = int(ids_sorted.shape[0]) if max_degree is None else max(max_degree, 1)
+    bs_steps = min(32, max(1, bound.bit_length()))
+
+    def bias_of(u, w, mask):
+        if wb.needs_deg_u:
+            uq = u if row_of is None else row_of(u)
+            deg_u = jnp.where(mask, _degree(graph, uq), 0)
+        else:  # declared unused — skip two window-wide indptr gathers
+            deg_u = jnp.zeros(u.shape, jnp.int32)
+        ipn = None
+        if wb.needs_prev_neighbors:
+            ipn = _is_prev_neighbor_window(
+                graph.indptr, ids_sorted, pq, prev, u, mask, steps=bs_steps
+            )
+        ctx = EdgeCtx(
+            v=v, u=u, weight=w, deg_v=deg_v, deg_u=deg_u, prev=prev,
+            is_prev_neighbor=ipn, depth=depth,
+        )
+        return wb.fn(ctx)
+
+    return bias_of
+
+
+def walk_window_transition(key: jax.Array, graph: CSRGraph, indices_out: jax.Array,
+                           padded, v: jax.Array, prev: jax.Array,
+                           depth, spec: SamplingSpec, program: tp.TransitionProgram,
+                           be: str, *, buckets: tuple, use_chunked: bool,
+                           max_degree: int | None = None, row_of=None,
+                           home: jax.Array | None = None) -> jax.Array:
+    """SELECT + epilogue of one window-bias (dynamic) walk step — the
+    transition-program path that puts node2vec-class specs on the
+    degree-bucketed scheduler (shared by the in-memory engine and the §V
+    out-of-memory drain loop).  ``padded`` maps bucket segments to padded
+    (ids, WEIGHTS) arrays; the dynamic hook is evaluated per bucket on the
+    kernel's gathered windows, chunk-wise on the huge-degree tail."""
+    vq = v if row_of is None else row_of(v)
+    kf = jax.random.fold_in(key, 1)
+    bias_of = _window_bias_fn(
+        graph, program, v, prev, depth, row_of, indices_out, max_degree
+    )
+    u = bk.walk_step_bucketed_window(
+        kf, graph.indptr, indices_out, graph.weights, padded, vq, bias_of,
+        buckets=buckets, use_chunked=use_chunked, backend=be,
+    )
+    return _select_epilogue(key, graph, program, spec, v, prev, depth, u, vq, row_of, home)
+
+
+def walk_gather_transition(key: jax.Array, ctx: EdgeCtx, mask: jax.Array,
+                           spec: SamplingSpec, be: str,
+                           program: tp.TransitionProgram | None = None,
+                           home: jax.Array | None = None) -> jax.Array:
+    """SELECT + epilogue of one gather-based walk step — the dense
+    full-context fallback for opaque transition programs (shared by the
+    in-memory engine and the §V out-of-memory drain loop).
 
     Dispatches the ITS draw through the backend (bit-identical across
     backends for k=1, DESIGN.md §4/§6); returns next vertices, -1 for dead
     ends and already-finished walkers.
     """
+    program = tp.lower(spec) if program is None else program
     biases = jnp.where(mask, spec.edge_bias(ctx), 0.0)
     idx = bk.select_with_replacement(
         jax.random.fold_in(key, 1), biases, mask, 1, backend=be
@@ -140,7 +263,7 @@ def walk_gather_transition(key: jax.Array, ctx: EdgeCtx, mask: jax.Array,
     u = jnp.take_along_axis(ctx.u, idx[..., None], axis=-1)[..., 0]
     alive = (ctx.v >= 0) & jnp.any(mask, axis=-1)
     u = jnp.where(alive, u, -1)
-    nxt = spec.update(jax.random.fold_in(key, 2), ctx, u)
+    nxt = tp.apply_epilogue(jax.random.fold_in(key, 2), program, spec, ctx, u, home)
     return jnp.where(alive, nxt, -1)
 
 
@@ -167,38 +290,51 @@ def random_walk(
 ) -> WalkResult:
     """Run one random-walk step per scan iteration for all instances.
 
-    With ``backend="pallas"`` and a spec that provides ``flat_edge_bias``
-    (and no prev-dependence), each step runs the degree-bucketed kernel
-    scheduler straight off the flat CSR arrays — no padded neighbor tensors
-    are ever materialized.  Other specs keep the gather-based step but still
-    dispatch the ITS draw to the selection kernel.
+    Dispatch is on the spec's lowered transition program (DESIGN.md §10):
+    flat-bias programs run the degree-bucketed scheduler straight off the
+    flat CSR arrays, window-bias programs (node2vec-class dynamic hooks)
+    evaluate their hook per degree bucket on the kernel's gathered edge
+    windows — on BOTH backends (Pallas kernels vs the bit-identical jnp
+    mirrors), so no padded ``(W, max_degree)`` neighbor tensors are ever
+    materialized.  Only opaque programs keep the dense full-context gather,
+    still dispatching the ITS draw to the selection kernel.
     """
     num_inst = seeds.shape[0]
     be = bk.resolve_backend(backend)
-    fast_walk = (
-        be == "pallas"
-        and spec.flat_edge_bias is not None
-        and not spec.needs_prev_neighbors
-    )
-    if fast_walk:
-        flat_bias = spec.flat_edge_bias(graph)
+    program = tp.lower(spec)
+    mode = program.mode
+    if mode == "flat":
+        flat_bias = program.bias.fn(graph)
         buckets, use_chunked = bk.walk_bucket_plan(max_degree)
         padded = bk.pad_walk_csr(graph.indices, flat_bias, buckets)
+    elif mode == "window":
+        # the window path treats max_degree as the TRUE max row degree
+        # (exact bucket plan; chunked tail above the top segment)
+        buckets, use_chunked = bk.walk_bucket_plan_window(max_degree)
+        padded = bk.pad_walk_csr(graph.indices, graph.weights, buckets)
+    home = seeds.astype(jnp.int32) if program.carries_home else None
 
     def step(carry, it):
         cur, prev = carry
         kstep = jax.random.fold_in(key, it)
-        if fast_walk:
+        if mode == "flat":
             # max_degree stays None: the caller's bound may be understated,
             # and only a TRUE max degree (like the OOM drain computes) may
             # truncate the reference mirror's windows
             nxt = walk_flat_transition(
                 kstep, graph, graph.indices, flat_bias, padded, cur, prev, it,
                 spec, be, buckets=buckets, use_chunked=use_chunked,
+                program=program, home=home,
+            )
+        elif mode == "window":
+            nxt = walk_window_transition(
+                kstep, graph, graph.indices, padded, cur, prev, it, spec,
+                program, be, buckets=buckets, use_chunked=use_chunked,
+                max_degree=max_degree, home=home,
             )
         else:
             ctx, mask = _edge_ctx(graph, cur, prev, it, max_degree, spec.needs_prev_neighbors)
-            nxt = walk_gather_transition(kstep, ctx, mask, spec, be)
+            nxt = walk_gather_transition(kstep, ctx, mask, spec, be, program, home)
         return (nxt, cur), nxt
 
     (_, _), path = jax.lax.scan(step, (seeds.astype(jnp.int32), jnp.full((num_inst,), -1, jnp.int32)), jnp.arange(depth))
@@ -240,6 +376,7 @@ def traversal_sample(
     """
     num_inst, _ = seed_pools.shape
     be = bk.resolve_backend(backend)
+    program = tp.lower(spec)
     fs, ns = spec.frontier_size, spec.neighbor_size
     edges_per_iter = fs * ns if spec.per_vertex else ns
     cap = depth * edges_per_iter
@@ -337,7 +474,8 @@ def traversal_sample(
             deg_u=jnp.where(dst >= 0, _degree(graph, dst), 0),
             prev=jnp.full((num_inst,), -1, jnp.int32), is_prev_neighbor=None, depth=it,
         )
-        new_v = spec.update(jax.random.fold_in(kit, 2), ectx_flat, dst)
+        # UPDATE lowers to the same fused epilogue the walk engines run
+        new_v = tp.apply_epilogue(jax.random.fold_in(kit, 2), program, spec, ectx_flat, dst)
         new_v = jnp.where(valid, new_v, -1)
         if track:
             oh = jax.nn.one_hot(jnp.maximum(new_v, 0), max_vertices, dtype=bool)

@@ -19,12 +19,17 @@ as ``(P, cap)`` flat arrays.  The per-partition drain is a single
 ``lax.scan`` over fixed-size chunks inside ONE jit per (partition shape,
 spec, chunk) — partitions are padded to a common shape so every partition
 shares the same trace — and cross-partition redistribution is one vectorized
-scatter (:func:`frontier.push_many`).  Selection routes through
-``core.backend``: specs with a static ``flat_edge_bias`` take the
-degree-bucketed walk fast path (Pallas kernels on ``backend="pallas"``, the
-bit-identical pure-jnp mirror on ``"reference"``); state-dependent specs use
-the shared gather step (``engine.walk_gather_transition``).  Both backends
-consume identical RNG bits, so walks and stats agree exactly.
+scatter (:func:`frontier.push_many`).  Selection dispatches on the spec's
+lowered transition program (``core.transition``, DESIGN.md §10): flat-bias
+programs take the degree-bucketed walk fast path (Pallas kernels on
+``backend="pallas"``, the bit-identical pure-jnp mirror on ``"reference"``),
+window-bias programs (node2vec-class dynamic hooks) evaluate their hook per
+degree bucket on gathered edge windows (``engine.walk_window_transition``),
+epilogues (MH-accept / jump / restart) fuse into the shared post-select
+step — so non-flat specs run out-of-memory on the fast path too; only
+opaque programs use the dense gather step
+(``engine.walk_gather_transition``).  Both backends consume identical RNG
+bits, so walks and stats agree exactly.
 
 The CPU still decides *which* partition to ship (as in the paper), but every
 scheduling decision it acts on — partition order, per-partition budgets — is
@@ -50,7 +55,13 @@ import numpy as np
 from repro.core.api import SamplingSpec
 from repro.core import backend as bk
 from repro.core import frontier
-from repro.core.engine import _edge_ctx, walk_flat_transition, walk_gather_transition
+from repro.core import transition as tp
+from repro.core.engine import (
+    _edge_ctx,
+    walk_flat_transition,
+    walk_gather_transition,
+    walk_window_transition,
+)
 from repro.graph.partition import (
     DevicePartition,
     PartitionMap,
@@ -85,8 +96,10 @@ class ResidentPartition(NamedTuple):
     """A partition materialized on device, plus its spec-derived edge bias."""
 
     dev: DevicePartition
-    flat_bias: Optional[jax.Array]  # (E_P,) CSR-order bias, fast path only
-    padded: Optional[dict]  # bucket seg -> padded (indices, bias) arrays
+    flat_bias: Optional[jax.Array]  # (E_P,) CSR-order bias, flat mode only
+    # bucket seg -> padded (indices, bias-or-weights) arrays; bias in flat
+    # mode, edge weights in window mode (the dynamic hook reads them)
+    padded: Optional[dict]
 
 
 class TransferEngine:
@@ -174,7 +187,7 @@ def _plan(counts, *, workload_aware: bool, balance: bool, num_streams: int, chun
     jax.jit,
     static_argnames=(
         "spec", "max_degree", "flat_max_degree", "depth", "chunk", "n_chunks",
-        "be", "batched", "fast", "buckets", "use_chunked", "range_size",
+        "be", "batched", "mode", "buckets", "use_chunked", "range_size",
     ),
     # the host never reuses the pre-call queues/walks — donate them so XLA
     # updates in place instead of copying both buffers every call (a no-op
@@ -197,7 +210,7 @@ def _drain(
     n_chunks: int,
     be: str,
     batched: bool,
-    fast: bool,
+    mode: str,
     buckets: tuple,
     use_chunked: bool,
     range_size: int,
@@ -208,25 +221,36 @@ def _drain(
     survivors to their owning partitions' queues in one vectorized push."""
     dev = part.dev
     num_parts = queues.num_partitions
+    program = tp.lower(spec)
 
     def _run_chunk(carry, kstep):
         queues, walks, sampled, budget_left = carry
         (v, inst, d, prev), taken, queues = frontier.pop_chunk(
             queues, pid, chunk, limit=budget_left, match_head_instance=not batched
         )
-        if fast:
+        # teleport-to-home epilogues read the walk's seed back off column 0
+        home = walks[jnp.maximum(inst, 0), 0] if program.carries_home else None
+        if mode == "flat":
             nxt = walk_flat_transition(
                 kstep, dev.graph, dev.indices_global, part.flat_bias,
                 part.padded, v, prev, jnp.zeros((), jnp.int32), spec, be,
                 buckets=buckets, use_chunked=use_chunked,
                 max_degree=flat_max_degree, row_of=dev.localize,
+                program=program, home=home,
+            )
+        elif mode == "window":
+            nxt = walk_window_transition(
+                kstep, dev.graph, dev.indices_global, part.padded, v, prev,
+                jnp.zeros((), jnp.int32), spec, program, be,
+                buckets=buckets, use_chunked=use_chunked,
+                max_degree=flat_max_degree, row_of=dev.localize, home=home,
             )
         else:
             ctx, mask = _edge_ctx(
                 dev.graph, v, prev, jnp.zeros((), jnp.int32), max_degree,
                 spec.needs_prev_neighbors, partition=dev,
             )
-            nxt = walk_gather_transition(kstep, ctx, mask, spec, be)
+            nxt = walk_gather_transition(kstep, ctx, mask, spec, be, program, home)
         ok = (nxt >= 0) & (inst >= 0)
         # sentinel must be OOB-positive: mode="drop" WRAPS negative indices
         num_inst = walks.shape[0]
@@ -286,19 +310,23 @@ def oom_random_walk(
     num_inst = len(seeds)
     pm = PartitionMap.create(total_vertices, num_parts)
     be = bk.resolve_backend(backend)
-    fast = spec.flat_edge_bias is not None and not spec.needs_prev_neighbors
-    # the flat path plans buckets from the TRUE max row degree (cheap to read
+    program = tp.lower(spec)
+    mode = program.mode
+    # the bucketed paths plan from the TRUE max row degree (cheap to read
     # off the host-resident partitions): with an understated ``max_degree`` a
     # hub walker would match no bucket and silently die, where the gather
     # path merely truncates its neighborhood like the paper's padded gather
     flat_md = 1
-    if fast:
+    if mode != "opaque":
         for p in partitions:
             if p.num_vertices:
                 flat_md = max(flat_md, int(np.diff(p.indptr).max()))
-    buckets, use_chunked = (
-        bk.walk_bucket_plan(flat_md, exact=True) if fast else ((), False)
-    )
+    if mode == "flat":
+        buckets, use_chunked = bk.walk_bucket_plan(flat_md, exact=True)
+    elif mode == "window":
+        buckets, use_chunked = bk.walk_bucket_plan_window(flat_md)
+    else:
+        buckets, use_chunked = (), False
 
     seeds32 = jnp.asarray(np.asarray(seeds), jnp.int32)
     walks = jnp.full((num_inst, depth + 1), -1, jnp.int32).at[:, 0].set(seeds32)
@@ -324,9 +352,14 @@ def oom_random_walk(
 
     def materialize(part: RangePartition) -> ResidentPartition:
         dev = part.to_local_device_csr(pad_vertices=pad_v, pad_edges=pad_e)
-        if fast:
-            fb = spec.flat_edge_bias(dev.graph)
+        if mode == "flat":
+            fb = program.bias.fn(dev.graph)
             return ResidentPartition(dev, fb, bk.pad_walk_csr(dev.indices_global, fb, buckets))
+        if mode == "window":
+            # the dynamic hook reads edge weights off the gathered windows
+            return ResidentPartition(
+                dev, None, bk.pad_walk_csr(dev.indices_global, dev.graph.weights, buckets)
+            )
         return ResidentPartition(dev, None, None)
 
     engine = TransferEngine(partitions, materialize, memory_capacity)
@@ -338,7 +371,7 @@ def oom_random_walk(
         _drain,
         spec=spec, max_degree=max_degree, flat_max_degree=flat_md, depth=depth,
         chunk=width, n_chunks=-(-num_streams * chunk // width), be=be,
-        batched=batched, fast=fast, buckets=buckets, use_chunked=use_chunked,
+        batched=batched, mode=mode, buckets=buckets, use_chunked=use_chunked,
         range_size=pm.range_size,
     )
 

@@ -310,3 +310,68 @@ def walk_transition_chunked(
     # numerical edge: r*total == total -> take last valid edge
     found = jnp.where((found < 0) & (deg > 0) & (total > 0), deg - 1, found)
     return jnp.where((deg > 0) & (total > 0), found, -1)
+
+
+def walk_transition_chunked_window(
+    key: jax.Array,
+    indptr: jax.Array,
+    indices: jax.Array,
+    weights: jax.Array,
+    cur: jax.Array,
+    bias_of,
+    chunk: int = 512,
+) -> jax.Array:
+    """Dynamic-bias variant of :func:`walk_transition_chunked`.
+
+    The per-edge bias is not a flat array — it is ``bias_of(u, w, mask)``,
+    the transition program's window-bias hook evaluated on each ``(W, chunk)``
+    edge window (``u`` = neighbor ids from ``indices``, ``w`` = edge weights,
+    padding masked).  Both passes evaluate the (pure) hook on identical
+    windows, so pass-2 crossings agree with pass-1 totals exactly.  Pure jnp,
+    shared verbatim by both backends (the huge-degree tail of the bucketed
+    window scheduler).  Returns per-row edge offsets, -1 for dead ends.
+    Not jitted here: ``bias_of`` is a closure — callers jit the enclosing
+    step.
+    """
+    start = indptr[cur]
+    deg = indptr[cur + 1] - start
+    nchunks = jnp.maximum((jnp.max(deg) + chunk - 1) // chunk, 1)
+    max_iters = (weights.shape[0] + chunk - 1) // chunk
+
+    def chunk_bias(c):
+        offs = c * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        m = offs < deg[..., None]
+        eidx = jnp.where(m, start[..., None] + offs, 0)
+        u = jnp.where(m, indices[eidx], -1)
+        w = jnp.where(m, weights[eidx], 0.0)
+        return jnp.where(m, jnp.maximum(bias_of(u, w, m), 0.0), 0.0), m
+
+    def p1_body(c, tot):
+        def step(t):
+            b, _ = chunk_bias(c)
+            return t + jnp.sum(b, axis=-1)
+
+        return jax.lax.cond(c < nchunks, step, lambda t: t, tot)
+
+    total = jax.lax.fori_loop(0, max_iters, p1_body, jnp.zeros(cur.shape, jnp.float32))
+    r = jax.random.uniform(key, cur.shape, dtype=jnp.float32)
+    target = r * total
+
+    def p2_body(c, carry):
+        def step(args):
+            cum, found = args
+            b, m = chunk_bias(c)
+            cw = jnp.cumsum(b, axis=-1) + cum[..., None]
+            hit = (cw > target[..., None]) & m & (found[..., None] < 0)
+            any_hit = jnp.any(hit, axis=-1)
+            first = jnp.argmax(hit, axis=-1) + c * chunk
+            found = jnp.where((found < 0) & any_hit, first, found)
+            return cw[..., -1], found
+
+        return jax.lax.cond(c < nchunks, step, lambda a: a, carry)
+
+    cum0 = jnp.zeros(cur.shape, jnp.float32)
+    found0 = jnp.full(cur.shape, -1, jnp.int32)
+    _, found = jax.lax.fori_loop(0, max_iters, p2_body, (cum0, found0))
+    found = jnp.where((found < 0) & (deg > 0) & (total > 0), deg - 1, found)
+    return jnp.where((deg > 0) & (total > 0), found, -1)

@@ -39,15 +39,12 @@ def build_walk_corpus(
     )
     md = max_degree or graph.max_degree()
     res = random_walk(graph, seeds, key, depth=walk_length, spec=spec, max_degree=md)
-    walks = np.asarray(res.walks)
-    # pad dead ends with the last valid vertex
-    for row in walks:
-        last = row[0]
-        for j in range(row.shape[0]):
-            if row[j] < 0:
-                row[j] = last
-            else:
-                last = row[j]
+    # np.asarray of a device array is a read-only view — copy before editing
+    walks = np.array(res.walks)
+    # pad dead ends by forward-filling the last valid vertex (vectorized;
+    # column 0 is always a seed, so every row has a fill source)
+    col = np.where(walks < 0, 0, np.arange(walks.shape[1]))
+    walks = np.take_along_axis(walks, np.maximum.accumulate(col, axis=1), axis=1)
     if vocab_size is not None:
         assert walks.max() < vocab_size, "graph vertices exceed LM vocab"
     return walks.astype(np.int32)

@@ -22,6 +22,14 @@ class CSRGraph:
     indptr:  (V+1,) int32 — neighbor list offsets.
     indices: (E,)   int32 — neighbor vertex ids.
     weights: (E,)   float32 — edge weights (all-ones if unweighted).
+
+    INVARIANT: ``indices`` is sorted ascending within each row.  Every
+    constructor in ``repro.graph`` guarantees it (``csr_from_edges``
+    lexsorts; the generators build through it; partition localization
+    preserves row order).  The windowed prev-membership search of the
+    transition-program fast path (DESIGN.md §10) binary-searches rows and
+    silently misses neighbors on unsorted rows — code that builds a
+    CSRGraph directly from raw arrays must sort rows first.
     """
 
     indptr: jax.Array

@@ -10,11 +10,16 @@ elsewhere (``resolve_interpret``); the selection backend dispatcher in
 ``repro.core.backend`` decides when the engine uses them at all.
 """
 from repro.kernels.its_select import its_select_pallas, resolve_interpret
-from repro.kernels.walk_step import pad_csr_for_kernel, walk_step_pallas
+from repro.kernels.walk_step import (
+    pad_csr_for_kernel,
+    walk_step_pallas,
+    walk_step_window_pallas,
+)
 
 __all__ = [
     "its_select_pallas",
     "walk_step_pallas",
+    "walk_step_window_pallas",
     "pad_csr_for_kernel",
     "resolve_interpret",
 ]

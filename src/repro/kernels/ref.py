@@ -75,6 +75,92 @@ def its_select_ref(biases: jax.Array, rands: jax.Array) -> jax.Array:
     return out
 
 
+def _block_window(starts: jax.Array, degs: jax.Array, seg: int, width: int):
+    """Block-aligned window coordinates of each walker's CSR segment.
+
+    The kernel DMAs the two consecutive ``seg``-blocks containing a walker's
+    row (``walk_step_pallas``); its window starts at ``blk0 = start//seg*seg``
+    and the row occupies offsets ``[local, local+deg)`` with
+    ``local = start % seg``.  Returns ``(local, blk0, offs, mask)`` with
+    ``offs`` of length ``width`` (``2*seg`` for the kernel's full window; a
+    truncated tail never changes any cumsum prefix)."""
+    local = starts % seg
+    blk0 = starts // seg * seg
+    offs = jnp.arange(width, dtype=jnp.int32)
+    mask = (offs >= local[..., None]) & (offs < (local + degs)[..., None])
+    return local, blk0, offs, mask
+
+
+def _window_pick(
+    local: jax.Array,
+    blk0: jax.Array,
+    degs: jax.Array,
+    mask: jax.Array,
+    wts: jax.Array,
+    rand: jax.Array,
+    inds_p: jax.Array,
+) -> jax.Array:
+    """Masked-cumsum ITS pick over block-aligned windows — the kernel's exact
+    arithmetic (DESIGN.md §6).  XLA's cumsum is position-indexed (prefix ``i``
+    combines elements in a tree fixed by ``i`` alone), so ``wts`` must sit at
+    the kernel's window offsets; then reference and Pallas agree bit-for-bit.
+    The selected id is gathered directly instead of through the kernel's
+    float32 one-hot reduction (identical for ids < 2^24, i.e. any graph this
+    repo can hold in f32 bias arrays)."""
+    cum = jnp.cumsum(wts, axis=-1)
+    total = cum[..., -1]
+    target = rand * total
+    pick = jnp.sum(((cum <= target[..., None]) & mask).astype(jnp.int32), axis=-1)
+    pick = jnp.minimum(local + pick, local + jnp.maximum(degs - 1, 0))
+    cand = inds_p[blk0 + pick]
+    dead = (degs <= 0) | (total <= _EPS)
+    return jnp.where(dead, -1, cand)
+
+
+def walk_step_block_ref(
+    starts: jax.Array,
+    degs: jax.Array,
+    inds_p: jax.Array,
+    bias_p: jax.Array,
+    rand: jax.Array,
+    *,
+    seg: int,
+    width: int | None = None,
+) -> jax.Array:
+    """Pure-jnp mirror of one flat-bias ``walk_step_pallas`` cohort.
+
+    ``inds_p``/``bias_p`` are the SAME padded flat CSR arrays the kernel
+    DMAs (``pad_csr_for_kernel``); bias is gathered from the flat array at
+    the window offsets.  ``width`` defaults to the kernel's full ``2*seg``
+    window; callers that know the true max row degree may truncate the tail
+    (``seg + min(seg, max_degree)``) without changing any prefix."""
+    width = 2 * seg if width is None else width
+    local, blk0, _, mask = _block_window(starts, degs, seg, width)
+    win = blk0[..., None] + jnp.arange(width, dtype=jnp.int32)
+    wts = jnp.where(mask, bias_p[win], 0.0)
+    return _window_pick(local, blk0, degs, mask, wts, rand, inds_p)
+
+
+def walk_step_window_block_ref(
+    starts: jax.Array,
+    degs: jax.Array,
+    inds_p: jax.Array,
+    bias_win: jax.Array,
+    rand: jax.Array,
+    *,
+    seg: int,
+) -> jax.Array:
+    """Pure-jnp mirror of one window-bias ``walk_step_window_pallas`` cohort.
+
+    ``bias_win`` is the per-walker ``(W, 2*seg)`` bias evaluated on the
+    block-aligned edge window (``core.backend.walk_step_bucketed_window``
+    computes it ONCE, in shared jnp, for both backends — so cross-backend
+    parity reduces to the pick arithmetic, which this mirrors exactly)."""
+    local, blk0, _, mask = _block_window(starts, degs, seg, bias_win.shape[-1])
+    wts = jnp.where(mask, bias_win, 0.0)
+    return _window_pick(local, blk0, degs, mask, wts, rand, inds_p)
+
+
 def walk_step_ref(
     starts: jax.Array,
     degs: jax.Array,

@@ -58,6 +58,41 @@ def _walk_step_kernel(
     out_ref[0] = jnp.where(dead, -1, nxt)
 
 
+def _walk_step_window_kernel(
+    starts_ref,  # scalar-prefetch (W,)
+    degs_ref,  # scalar-prefetch (W,)
+    rand_ref,  # (1,) this walker's uniform
+    bias_ref,  # (1, 2*max_seg) this walker's window-aligned bias row
+    idx_lo_ref,  # (max_seg,) neighbor-id block containing `start`
+    idx_hi_ref,  # (max_seg,) following block
+    out_ref,  # (1,) next vertex
+    *,
+    max_seg: int,
+):
+    """Window-bias variant of the walk step (transition programs, DESIGN.md
+    §10): the per-edge bias is a *computed operand* — evaluated by the
+    engine's dynamic edge-bias hook on this walker's gathered edge window —
+    instead of a slice of a static flat CSR array.  Neighbor ids still
+    arrive by segment DMA; the ITS pick is identical to the flat kernel."""
+    w = pl.program_id(0)
+    start = starts_ref[w]
+    deg = degs_ref[w]
+    local = start % max_seg  # offset inside the 2-block window
+    offs = jax.lax.broadcasted_iota(jnp.int32, (2 * max_seg,), 0)
+    mask = (offs >= local) & (offs < local + deg)
+    wts = jnp.where(mask, bias_ref[0, :], 0.0)
+    cum = jnp.cumsum(wts)
+    total = cum[-1]
+    target = rand_ref[0] * total
+    pick = jnp.sum(((cum <= target) & mask).astype(jnp.int32))
+    pick = jnp.minimum(local + pick, local + jnp.maximum(deg - 1, 0))
+    ids = jnp.concatenate([idx_lo_ref[...], idx_hi_ref[...]])
+    oh = (offs == pick).astype(jnp.float32)
+    nxt = jnp.sum(oh * ids.astype(jnp.float32)).astype(jnp.int32)
+    dead = (deg <= 0) | (total <= _EPS)
+    out_ref[0] = jnp.where(dead, -1, nxt)
+
+
 def pad_csr_for_kernel(indices: jax.Array, weights: jax.Array, max_seg: int):
     """Pad flat CSR edge arrays to a block multiple plus one spill block."""
     e = indices.shape[0]
@@ -120,3 +155,59 @@ def walk_step_pallas(
         out_shape=jax.ShapeDtypeStruct((w,), jnp.int32),
         interpret=resolve_interpret(interpret),
     )(starts, degs, rand, indices, indices, weights, weights)
+
+
+@functools.partial(jax.jit, static_argnames=("max_seg", "interpret"))
+def walk_step_window_pallas(
+    starts: jax.Array,
+    degs: jax.Array,
+    indices: jax.Array,
+    bias_win: jax.Array,
+    rand: jax.Array,
+    *,
+    max_seg: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One dynamic-bias walk step for W walkers (transition programs).
+
+    Like :func:`walk_step_pallas` but the per-edge bias is ``bias_win``:
+    ``(W, 2*max_seg)`` float32 rows, one per walker, aligned with the
+    kernel's 2-block edge window (the walker's neighbors sit at offsets
+    ``[start % max_seg, start % max_seg + deg)``).  ``indices`` is the
+    padded flat CSR id array (:func:`pad_csr_for_kernel`).
+    """
+    w = starts.shape[0]
+    e = indices.shape[0]
+    assert e % max_seg == 0, "pad CSR edge arrays with pad_csr_for_kernel"
+    assert bias_win.shape == (w, 2 * max_seg), bias_win.shape
+
+    def lo_map(i, starts_ref, degs_ref):
+        return (starts_ref[i] // max_seg,)
+
+    def hi_map(i, starts_ref, degs_ref):
+        return (starts_ref[i] // max_seg + 1,)
+
+    def per_walker(i, starts_ref, degs_ref):
+        return (i,)
+
+    def bias_row(i, starts_ref, degs_ref):
+        return (i, 0)
+
+    kernel = functools.partial(_walk_step_window_kernel, max_seg=max_seg)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(w,),
+        in_specs=[
+            pl.BlockSpec((1,), per_walker),
+            pl.BlockSpec((1, 2 * max_seg), bias_row),
+            pl.BlockSpec((max_seg,), lo_map),
+            pl.BlockSpec((max_seg,), hi_map),
+        ],
+        out_specs=pl.BlockSpec((1,), per_walker),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.int32),
+        interpret=resolve_interpret(interpret),
+    )(starts, degs, rand, bias_win, indices, indices)

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config
 from repro.launch import shapes as shp
-from repro.launch.hlo_analysis import analyze
+from repro.launch.hlo_analysis import analyze, xla_cost_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as m
 from repro.train import optimizer as opt
@@ -103,7 +103,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str, override
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = xla_cost_analysis(compiled)
     hlo = compiled.as_text()
     # loop-aware analysis (XLA's cost_analysis counts while bodies once —
     # scanned layers would be undercounted n_rep×; see hlo_analysis.py)

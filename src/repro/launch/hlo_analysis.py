@@ -212,6 +212,24 @@ def _dot_flops(comp: Computation, ins: Instr) -> float:
     return 2.0 * res * contract
 
 
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions.
+
+    The signature drifted: older releases return a per-device LIST of dicts
+    (one entry per addressable device), newer ones return the dict directly.
+    Validation code (tests, roofline) should depend on this wrapper, not on
+    whichever shape the installed JAX happens to produce.
+    """
+    ca = compiled.cost_analysis()
+    if ca is None:  # some backends report nothing — keep the old `or {}` guard
+        return {}
+    if isinstance(ca, (list, tuple)):
+        if not ca:
+            return {}
+        ca = ca[0]
+    return dict(ca)
+
+
 @dataclasses.dataclass
 class HloCost:
     flops: float = 0.0

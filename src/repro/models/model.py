@@ -35,6 +35,29 @@ def _superblock_defs(cfg: ModelConfig) -> list:
     return [blocks.block_defs(cfg, kind) for kind in cfg.pattern]
 
 
+@jax.custom_vjp
+def _barrier(x):
+    """Differentiable ``optimization_barrier``.
+
+    The primitive has no autodiff rule on the pinned JAX version, so
+    differentiating the scanned superblock dies inside ``lax.scan``.  The
+    custom VJP barriers both directions — which is also the semantics we
+    want: the backward pass is exactly where XLA would otherwise hoist the
+    saved-carry dtype converts this barrier exists to prevent."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_barrier.defvjp(_barrier_fwd, _barrier_bwd)
+
+
 # logical param axes that map to the model (TP) mesh axis; everything else
 # (fsdp-sharded dims) is gathered at use time.
 _MODEL_AXES = {"heads", "kv_heads", "mlp", "experts", "rnn", "vocab"}
@@ -139,7 +162,7 @@ def forward_hidden(
         # carry OUT of the backward loop (materializes the whole (n_rep, B,
         # S, D) history in f32 otherwise — measured 12.9GB/device on
         # internlm2; EXPERIMENTS.md §Perf iteration 0).
-        x = jax.lax.optimization_barrier(x)
+        x = _barrier(x)
         rep_params = _gather_fsdp(rep_params, sb_defs, tp=cfg.tp_mode != "dp")
         aux = jnp.zeros((), jnp.float32)
         for i, kind in enumerate(cfg.pattern):

@@ -128,9 +128,11 @@ class TestEngineBackends:
         visit = np.bincount(last, minlength=graph.num_vertices).astype(float)
         assert np.corrcoef(visit, deg)[0, 1] > 0.7
 
-    def test_walk_fallback_bitwise(self, graph):
-        """State-dependent bias (node2vec): pallas falls back to the gather
-        step but still dispatches the draw — bit-identical to reference."""
+    def test_walk_window_bias_bitwise(self, graph):
+        """State-dependent bias (node2vec) runs the bucketed WINDOW path on
+        both backends (transition programs): the dynamic hook is evaluated
+        once in shared jnp, the pick dispatches kernel vs mirror —
+        bit-identical."""
         seeds = jax.random.randint(KEY, (32,), 0, graph.num_vertices)
         kw = dict(depth=5, spec=alg.node2vec(), max_degree=graph.max_degree())
         ref = random_walk(graph, seeds, KEY, backend="reference", **kw)
@@ -178,6 +180,169 @@ class TestEngineBackends:
         pal = traversal_sample(graph, pools, KEY, backend="pallas", **kw)
         for a, b, field in zip(ref, pal, ref._fields):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=field)
+
+
+def _rank2_trailing_dims(jaxpr, dims):
+    """Collect the trailing dim of every rank>=2 aval, recursing into nested
+    jaxprs (pjit/scan/cond/pallas_call bodies)."""
+    for eqn in jaxpr.eqns:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            shape = getattr(getattr(v, "aval", None), "shape", ())
+            if len(shape) >= 2:
+                dims.append(int(shape[-1]))
+        for val in eqn.params.values():
+            for sub in _subjaxprs(val):
+                _rank2_trailing_dims(sub, dims)
+    return dims
+
+
+def _subjaxprs(val):
+    if isinstance(val, jax.core.ClosedJaxpr):
+        return [val.jaxpr]
+    if isinstance(val, jax.core.Jaxpr):
+        return [val]
+    if isinstance(val, (list, tuple)):
+        return [j for v in val for j in _subjaxprs(v)]
+    return []
+
+
+class TestTransitionPrograms:
+    """The tentpole contract (DESIGN.md §10): node2vec/MH/jump/restart run
+    the degree-bucketed fast path on BOTH backends, bit-identically, with no
+    dense full-context gather in their jaxpr."""
+
+    @pytest.fixture(scope="class")
+    def graph(self):
+        return powerlaw_graph(256, seed=1, weighted=True)
+
+    def _specs(self, graph):
+        return {
+            "node2vec": alg.node2vec(),
+            "mhrw": alg.metropolis_hastings_walk(),
+            "rw_jump": alg.random_walk_with_jump(0.3, graph.num_vertices),
+            "rw_restart": alg.random_walk_with_restart(0.3, home=5),
+            "rw_restart_home": alg.random_walk_with_restart(0.3),
+        }
+
+    @pytest.mark.parametrize(
+        "name", ["node2vec", "mhrw", "rw_jump", "rw_restart", "rw_restart_home"]
+    )
+    def test_cross_backend_bitwise(self, graph, name):
+        spec = self._specs(graph)[name]
+        seeds = jax.random.randint(KEY, (48,), 0, graph.num_vertices)
+        kw = dict(depth=8, spec=spec, max_degree=graph.max_degree())
+        ref = random_walk(graph, seeds, KEY, backend="reference", **kw)
+        pal = random_walk(graph, seeds, KEY, backend="pallas", **kw)
+        np.testing.assert_array_equal(np.asarray(ref.walks), np.asarray(pal.walks))
+        np.testing.assert_array_equal(np.asarray(ref.lengths), np.asarray(pal.lengths))
+        assert int(ref.lengths.min()) == 9  # nobody silently died
+
+    @pytest.mark.parametrize(
+        "name", ["node2vec", "mhrw", "rw_jump", "rw_restart", "rw_restart_home"]
+    )
+    @pytest.mark.parametrize("backend", ["reference", "pallas"])
+    def test_no_dense_gather_in_jaxpr(self, graph, name, backend):
+        """With a declared max_degree far above the bucket windows, the
+        bucketed paths must not materialize any (..., max_degree)-wide
+        tensor; the widest allowed is the top bucket's 2·512 window.  The
+        forced-opaque fallback (transition stripped) does materialize one —
+        proof the probe can tell the difference."""
+        import dataclasses
+
+        declared = 4096
+        spec = self._specs(graph)[name]
+        seeds = jax.random.randint(KEY, (16,), 0, graph.num_vertices)
+
+        def dims_of(s):
+            jx = jax.make_jaxpr(
+                lambda g, sd, k: random_walk(
+                    g, sd, k, depth=2, spec=s, max_degree=declared, backend=backend
+                )
+            )(graph, seeds, KEY)
+            return _rank2_trailing_dims(jx.jaxpr, [])
+
+        assert max(dims_of(spec)) <= 2 * bk.WALK_BUCKETS[-1]
+        if name != "rw_restart_home":  # restart-to-seed has no legacy hook
+            opaque = dataclasses.replace(spec, transition=None, flat_edge_bias=None)
+            assert max(dims_of(opaque)) >= declared
+
+    @pytest.mark.parametrize("backend", ["reference", "pallas"])
+    def test_flat_understated_max_degree_truncates_not_kills(self, backend):
+        """Regression: with the bucketed flat path now the default on BOTH
+        backends, a hub whose degree exceeds the declared plan entirely
+        (deg 600 vs max_degree=256 → buckets (128,512), no chunked tail)
+        must truncate its neighborhood to the top cohort's window like the
+        dense gather did — not silently die at step 1."""
+        from repro.graph.csr import csr_from_edges
+
+        hub_deg = 600
+        src = np.concatenate([np.zeros(hub_deg, int), np.arange(1, hub_deg + 1)])
+        dst = np.concatenate([np.arange(1, hub_deg + 1), np.zeros(hub_deg, int)])
+        g = csr_from_edges(hub_deg + 1, src, dst)
+        seeds = jnp.zeros((8,), jnp.int32)
+        res = random_walk(g, seeds, KEY, depth=2, spec=alg.deepwalk(),
+                          max_degree=256, backend=backend)
+        walks = np.asarray(res.walks)
+        assert (walks[:, 1] >= 1).all() and (walks[:, 1] <= 512).all()
+        assert (walks[:, 2] == 0).all()
+        ref = random_walk(g, seeds, KEY, depth=2, spec=alg.deepwalk(),
+                          max_degree=256, backend="reference")
+        np.testing.assert_array_equal(walks, np.asarray(ref.walks))
+
+    def test_window_understated_max_degree_truncates_not_kills(self):
+        """In-memory the window path trusts the caller's max_degree for its
+        exact bucket plan; an UNDERSTATED bound must degrade like the dense
+        gather it replaced — hub neighborhoods truncate to the top cohort's
+        window — never silently kill walkers.  Both backends, bit-identical."""
+        from repro.graph.csr import csr_from_edges
+
+        hub_deg = 300  # true degree above the declared 256 plan
+        src = np.concatenate([np.zeros(hub_deg, int), np.arange(1, hub_deg + 1)])
+        dst = np.concatenate([np.arange(1, hub_deg + 1), np.zeros(hub_deg, int)])
+        g = csr_from_edges(hub_deg + 1, src, dst)
+        seeds = jnp.zeros((8,), jnp.int32)
+        kw = dict(depth=2, spec=alg.node2vec(), max_degree=256)
+        ref = random_walk(g, seeds, KEY, backend="reference", **kw)
+        pal = random_walk(g, seeds, KEY, backend="pallas", **kw)
+        walks = np.asarray(ref.walks)
+        assert (walks[:, 1] >= 1).all() and (walks[:, 1] <= 256).all()
+        assert (walks[:, 2] == 0).all()  # spokes point back at the hub
+        np.testing.assert_array_equal(walks, np.asarray(pal.walks))
+
+    def test_restart_home_returns_to_seed(self, graph):
+        """target="home" teleports to each walk's own seed (carried state)."""
+        spec = alg.random_walk_with_restart(1.0)
+        seeds = jax.random.randint(KEY, (16,), 0, graph.num_vertices)
+        res = random_walk(graph, seeds, KEY, depth=4, spec=spec,
+                          max_degree=graph.max_degree())
+        walks = np.asarray(res.walks)
+        for i in range(16):
+            alive = walks[i, 1:][walks[i, 1:] >= 0]
+            assert (alive == walks[i, 0]).all()
+
+    def test_lowering_infers_legacy_flags(self):
+        from repro.core import transition as tp
+        from repro.core.api import SamplingSpec
+
+        legacy_flat = SamplingSpec(flat_edge_bias=lambda g: g.weights)
+        prog = tp.lower(legacy_flat)
+        assert isinstance(prog.bias, tp.FlatBias)
+        assert isinstance(prog.epilogue, tp.IdentityEpilogue)
+
+        legacy_opaque = SamplingSpec(update=lambda k, c, u: u)
+        prog = tp.lower(legacy_opaque)
+        assert isinstance(prog.bias, tp.OpaqueBias)
+        assert isinstance(prog.epilogue, tp.OpaqueEpilogue)
+
+    def test_declared_program_wins(self):
+        from repro.core import transition as tp
+
+        spec = alg.metropolis_hastings_walk()
+        prog = tp.lower(spec)
+        assert isinstance(prog.bias, tp.FlatBias)
+        assert isinstance(prog.epilogue, tp.MHAcceptEpilogue)
+        assert not prog.carries_home
+        assert alg.random_walk_with_restart(0.5).transition.carries_home
 
 
 class TestScanTrace:

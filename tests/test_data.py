@@ -85,7 +85,11 @@ class TestWalkCorpus:
         from repro.train.train_step import make_train_step
 
         g = powerlaw_graph(200, seed=7)
-        corpus = build_walk_corpus(g, num_walks=128, walk_length=16, seed=2, vocab_size=256)
+        # a memorizable corpus: 8 fixed walks — every batch is the same 8
+        # sequences, so the LM must drive the loss down within a few dozen
+        # steps (a 128-walk corpus is genuinely high-entropy: next-vertex
+        # conditional entropy ≈ E[log deg], unreachable in a smoke run)
+        corpus = build_walk_corpus(g, num_walks=8, walk_length=16, seed=2, vocab_size=256)
         cfg = get_smoke_config("xlstm_350m")  # vocab 256
         pipe = TokenPipeline(cfg.vocab_size, 8, 16, corpus=corpus)
         mesh = jax.make_mesh((1, 1), ("data", "model"))
@@ -95,9 +99,9 @@ class TestWalkCorpus:
         step_fn, _ = make_train_step(cfg, ocfg, mesh)
         step = jnp.zeros((), jnp.int32)
         losses = []
-        for _ in range(12):
+        for _ in range(30):
             b = pipe.next()
             batch = {k: jnp.asarray(v) for k, v in b.items()}
             params, opt_state, step, metrics = step_fn(params, opt_state, step, batch)
             losses.append(float(metrics["loss"]))
-        assert losses[-1] < losses[0], losses
+        assert losses[-1] < losses[0] - 0.2, losses

@@ -166,3 +166,16 @@ class TestMultiDevice:
                 if a < 0 or b < 0:
                     break
                 assert (a, b) in graph_edges
+
+    def test_graph_sharded_runs_lowered_epilogue(self, graph):
+        """The sharded engine applies transition-program epilogues too:
+        restart-to-seed (which has no legacy update hook) must work."""
+        from repro.core.distributed import graph_sharded_walk
+        mesh = jax.make_mesh((1,), ("data",))
+        seeds = jax.random.randint(KEY, (8,), 0, graph.num_vertices)
+        walks = np.asarray(graph_sharded_walk(
+            mesh, graph, seeds, KEY, depth=4,
+            spec=alg.random_walk_with_restart(1.0), max_degree=graph.max_degree()))
+        for row in walks:
+            alive = row[1:][row[1:] >= 0]
+            assert (alive == row[0]).all()

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.hlo_analysis import analyze
+from repro.launch.hlo_analysis import analyze, xla_cost_analysis
 
 
 def test_loop_free_matches_xla_exactly():
@@ -14,7 +14,7 @@ def test_loop_free_matches_xla_exactly():
         jax.ShapeDtypeStruct((256, 512), jnp.float32),
         jax.ShapeDtypeStruct((512, 128), jnp.float32),
     ).compile()
-    ca = co.cost_analysis()
+    ca = xla_cost_analysis(co)
     mine = analyze(co.as_text())
     assert mine.flops == ca["flops"]
     assert abs(mine.bytes_accessed - ca["bytes accessed"]) / ca["bytes accessed"] < 0.02

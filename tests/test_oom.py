@@ -194,11 +194,31 @@ class TestBackendParity:
         np.testing.assert_array_equal(w_ref, w_pal)
         assert self._stats_tuple(s_ref) == self._stats_tuple(s_pal)
 
-    def test_gather_path_bitwise(self, setup):
-        """node2vec (prev-dependent bias) keeps the gather step; the ITS draw
-        still dispatches through the backend and stays bit-identical."""
+    def test_window_path_bitwise(self, setup):
+        """node2vec (prev-dependent bias) runs the bucketed WINDOW path in
+        the drain loop: the dynamic hook evaluates on gathered edge windows
+        in shared jnp, the pick dispatches kernel vs mirror — walks and
+        stats bit-identical."""
         g, parts, seeds = setup
         kw = dict(depth=4, spec=alg.node2vec(), max_degree=g.max_degree(),
+                  memory_capacity=2, chunk=64)
+        w_ref, s_ref = oom_random_walk(
+            parts, g.num_vertices, seeds, jax.random.PRNGKey(6), backend="reference", **kw)
+        w_pal, s_pal = oom_random_walk(
+            parts, g.num_vertices, seeds, jax.random.PRNGKey(6), backend="pallas", **kw)
+        np.testing.assert_array_equal(w_ref, w_pal)
+        assert self._stats_tuple(s_ref) == self._stats_tuple(s_pal)
+
+    def test_gather_fallback_bitwise(self, setup):
+        """A genuinely opaque spec (no transition program, no flat bias)
+        keeps the dense gather step; the ITS draw still dispatches through
+        the backend and stays bit-identical."""
+        import dataclasses
+
+        g, parts, seeds = setup
+        spec = dataclasses.replace(
+            alg.node2vec(), transition=None, flat_edge_bias=None)
+        kw = dict(depth=3, spec=spec, max_degree=g.max_degree(),
                   memory_capacity=2, chunk=64)
         w_ref, s_ref = oom_random_walk(
             parts, g.num_vertices, seeds, jax.random.PRNGKey(6), backend="reference", **kw)
@@ -230,6 +250,28 @@ class TestBackendParity:
         assert (w_ref[:, 1] >= 1).all()  # hub walkers stepped, not killed
         np.testing.assert_array_equal(w_ref, w_pal)
 
+    def test_understated_max_degree_window_path(self):
+        """Window-bias programs plan buckets from the TRUE max row degree
+        like the flat path: a deg-700 hub with declared max_degree=256 must
+        still walk (chunked dynamic tail), bit-identically across backends."""
+        from repro.graph import csr_from_edges
+
+        hub_deg = 700
+        src = np.concatenate([np.zeros(hub_deg, int), np.arange(1, hub_deg + 1)])
+        dst = np.concatenate([np.arange(1, hub_deg + 1), np.zeros(hub_deg, int)])
+        w = np.random.default_rng(0).uniform(0.1, 2.0, src.shape[0]).astype(np.float32)
+        g = csr_from_edges(hub_deg + 1, src, dst, w)
+        parts = partition_by_vertex_range(g, 4)
+        seeds = np.zeros(16, np.int64)  # all start at the hub
+        kw = dict(depth=4, spec=alg.node2vec(), max_degree=256,
+                  memory_capacity=2, chunk=64)
+        w_ref, _ = oom_random_walk(
+            parts, g.num_vertices, seeds, jax.random.PRNGKey(4), backend="reference", **kw)
+        w_pal, _ = oom_random_walk(
+            parts, g.num_vertices, seeds, jax.random.PRNGKey(4), backend="pallas", **kw)
+        assert (w_ref[:, 1] >= 1).all()  # hub walkers stepped, not killed
+        np.testing.assert_array_equal(w_ref, w_pal)
+
     def test_flat_matches_in_memory_stationary(self, setup):
         """The OOM deepwalk visits ∝ degree like the in-memory engine — the
         device frontier refactor must not distort the walk distribution."""
@@ -243,3 +285,71 @@ class TestBackendParity:
         deg = np.asarray(g.indptr[1:] - g.indptr[:-1]).astype(float)
         visit = np.bincount(last, minlength=g.num_vertices).astype(float)
         assert np.corrcoef(visit, deg)[0, 1] > 0.5
+
+
+class TestNonFlatSpecsOOM:
+    """Transition programs with epilogues and window biases complete
+    out-of-memory (paper §V) — for the first time not just flat specs."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        g = powerlaw_graph(512, seed=3, weighted=True)
+        parts = partition_by_vertex_range(g, 4)
+        seeds = np.random.default_rng(7).integers(0, 512, 96)
+        return g, parts, seeds
+
+    def _run(self, setup, spec, backend="reference", depth=6):
+        g, parts, seeds = setup
+        return oom_random_walk(
+            parts, g.num_vertices, seeds, jax.random.PRNGKey(9), depth=depth,
+            spec=spec, max_degree=g.max_degree(), memory_capacity=2,
+            chunk=128, backend=backend)
+
+    def test_node2vec_walks_are_paths(self, setup):
+        g, _, seeds = setup
+        walks, stats = self._run(setup, alg.node2vec())
+        ip, ind = np.asarray(g.indptr), np.asarray(g.indices)
+        np.testing.assert_array_equal(walks[:, 0], seeds)
+        for row in walks:
+            for a, b in zip(row[:-1], row[1:]):
+                if a < 0 or b < 0:
+                    break
+                assert b in ind[ip[a] : ip[a + 1]]
+        assert (walks >= 0).all()  # connected-ish graph: full depth
+        assert stats.sampled_edges > 0
+
+    def test_mhrw_stays_or_moves(self, setup):
+        g, _, _ = setup
+        walks, _ = self._run(setup, alg.metropolis_hastings_walk())
+        ip, ind = np.asarray(g.indptr), np.asarray(g.indices)
+        for row in walks:
+            for a, b in zip(row[:-1], row[1:]):
+                if a < 0 or b < 0:
+                    break
+                assert a == b or b in ind[ip[a] : ip[a + 1]]
+
+    def test_jump_crosses_partitions(self, setup):
+        g, _, _ = setup
+        walks, _ = self._run(setup, alg.random_walk_with_jump(1.0, g.num_vertices))
+        # all-jump walk: successors are uniform over V, not constrained to edges
+        assert len(np.unique(walks[:, 1])) > 16
+        assert (walks >= 0).all()
+
+    def test_restart_home_returns_to_seed(self, setup):
+        walks, _ = self._run(setup, alg.random_walk_with_restart(1.0))
+        for row in walks:
+            alive = row[1:][row[1:] >= 0]
+            assert (alive == row[0]).all()
+
+    @pytest.mark.parametrize("name", ["node2vec", "mhrw", "jump", "restart_home"])
+    def test_backend_parity(self, setup, name):
+        g = setup[0]
+        spec = {
+            "node2vec": alg.node2vec(),
+            "mhrw": alg.metropolis_hastings_walk(),
+            "jump": alg.random_walk_with_jump(0.3, g.num_vertices),
+            "restart_home": alg.random_walk_with_restart(0.3),
+        }[name]
+        w_ref, _ = self._run(setup, spec, backend="reference", depth=4)
+        w_pal, _ = self._run(setup, spec, backend="pallas", depth=4)
+        np.testing.assert_array_equal(w_ref, w_pal)
