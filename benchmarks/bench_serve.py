@@ -1,0 +1,159 @@
+"""Serving benchmark: fused multi-request batching → BENCH_serve.json.
+
+Measures what the batched multi-instance sampling service (``repro.serve``)
+buys over one-launch-per-request serving: 64 concurrent requests are
+submitted and drained through (a) fused padding-bucket cohorts and (b) the
+bit-identical ``ServiceConfig(fuse=False)`` baseline, across three
+request-arrival mixes on the pl50k benchmark graph (reference backend —
+the cross-host number; the kernel path only changes what runs inside each
+launch, not how many launches there are):
+
+- ``uniform``        — one algorithm, one walk length, one request size;
+- ``skewed_lengths`` — same algorithm, power-law-skewed walk lengths
+  (depth buckets fragment the cohorts; the realistic arrival case);
+- ``mixed_specs``    — node2vec (1 in 4) / deepwalk / weighted mix with
+  mixed lengths (cohorts also split per lowered transition program).
+
+Headline: fused-vs-sequential speedup per mix, plus requests/s and
+walker-steps/s throughput.  Acceptance floor (ISSUE 4): >= 1.5x on the
+mixed-spec mix.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_serve.py [--iters 3]
+(also exposed as ``run()`` rows through benchmarks/run.py)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks.common import BENCH_GRAPHS, row  # noqa: E402
+
+from repro.core import algorithms as alg  # noqa: E402
+from repro.serve import SamplingService, ServiceConfig  # noqa: E402
+
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
+
+GRAPH = "pl50k"
+N_REQUESTS = 64
+
+
+def _request_mixes(g, rng):
+    """64-request arrival mixes; every request carries an explicit key so the
+    fused and sequential services serve literally identical work."""
+    n2v = alg.node2vec()  # ONE spec instance: its requests may fuse
+    mixes = {}
+
+    # serving-scale requests: a user asks for a handful of walks.  This is
+    # the regime batching is FOR — each standalone launch is fixed-overhead
+    # dominated, so cohorts amortize it across requests.
+    uniform = []
+    for i in range(N_REQUESTS):
+        uniform.append((alg.deepwalk(), rng.integers(0, g.num_vertices, 16), 16))
+    mixes["uniform"] = uniform
+
+    skewed = []
+    depths = rng.choice([4, 8, 16, 32, 64], size=N_REQUESTS, p=[0.35, 0.3, 0.2, 0.1, 0.05])
+    for i in range(N_REQUESTS):
+        skewed.append((alg.deepwalk(), rng.integers(0, g.num_vertices, 16), int(depths[i])))
+    mixes["skewed_lengths"] = skewed
+
+    mixed = []
+    specs = [alg.deepwalk(), n2v, alg.weighted_random_walk(), alg.deepwalk()]
+    for i in range(N_REQUESTS):
+        spec = specs[i % len(specs)]
+        n = int(rng.integers(9, 17))  # one width bucket, varying fill
+        depth = int(rng.choice([8, 16]))
+        mixed.append((spec, rng.integers(0, g.num_vertices, n), depth))
+    mixes["mixed_specs"] = mixed
+    return mixes
+
+
+def _serve_once(svc, requests, keys):
+    for (spec, seeds, depth), key in zip(requests, keys):
+        svc.submit(seeds, depth=depth, spec=spec, key=key)
+    results = svc.drain()
+    assert len(results) == len(requests)
+    return results
+
+
+def _bench_mode(g, requests, keys, fuse, iters):
+    """Median submit+drain wall seconds in steady state (post-compile)."""
+    mk = lambda: SamplingService(  # noqa: E731
+        g, backend="reference", config=ServiceConfig(fuse=fuse)
+    )
+    svc = mk()
+    _serve_once(svc, requests, keys)  # warmup: compile every cohort trace
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _serve_once(svc, requests, keys)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    stats = svc.stats
+    return times[len(times) // 2], stats
+
+
+def run(iters: int = 3):
+    g = BENCH_GRAPHS[GRAPH]()
+    rng = np.random.default_rng(17)
+    mixes = _request_mixes(g, rng)
+    base_key = jax.random.PRNGKey(9)
+    results = []
+    for mix_name, requests in mixes.items():
+        keys = [jax.random.fold_in(base_key, i) for i in range(len(requests))]
+        walker_steps = sum(len(s) * d for _, s, d in requests)
+        fused_s, fstats = _bench_mode(g, requests, keys, fuse=True, iters=iters)
+        seq_s, _ = _bench_mode(g, requests, keys, fuse=False, iters=iters)
+        launches_per_drain = fstats.launches // (iters + 1)
+        entry = {
+            "graph": GRAPH,
+            "mix": mix_name,
+            "n_requests": len(requests),
+            "walker_steps": walker_steps,
+            "fused_seconds": fused_s,
+            "sequential_seconds": seq_s,
+            "speedup": seq_s / fused_s,
+            "fused_launches_per_drain": launches_per_drain,
+            "fused_requests_per_s": len(requests) / fused_s,
+            "fused_walker_steps_per_s": walker_steps / fused_s,
+            "sequential_walker_steps_per_s": walker_steps / seq_s,
+        }
+        results.append(entry)
+        yield row(
+            f"serve_{mix_name}_fused", fused_s * 1e6,
+            f"requests={len(requests)};launches={launches_per_drain};"
+            f"speedup={entry['speedup']:.2f}x",
+        )
+        yield row(f"serve_{mix_name}_sequential", seq_s * 1e6,
+                  f"requests={len(requests)};launches={len(requests)}")
+
+    OUT_PATH.write_text(json.dumps({
+        # shared benchmark-JSON schema (DESIGN.md §9): diffable PR-over-PR
+        "bench": "serve",
+        "device": jax.default_backend(),
+        "backend": "reference",
+        "graph": GRAPH,
+        "n_requests": N_REQUESTS,
+        "results": results,
+    }, indent=2))
+    yield row("serve_json", 0.0, str(OUT_PATH.name))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for r in run(args.iters):
+        print(r, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (  # noqa: PLC0415
+        bench_serve,
         bench_walk,
         fig09_seps,
         fig10_inmem,
@@ -33,6 +34,7 @@ def main() -> None:
         "fig17": fig17_scaling,
         "roofline": roofline,
         "walk": bench_walk,  # transition programs; writes BENCH_walk.json
+        "serve": bench_serve,  # batched request serving; writes BENCH_serve.json
     }
     keys = args.only.split(",") if args.only else list(modules)
     print("name,us_per_call,derived")

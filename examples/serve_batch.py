@@ -1,17 +1,24 @@
-"""Batched serving demo: prefill + decode with the KV/state cache.
+"""Batched serving demo: the multi-instance sampling service.
 
-Loads a smoke-scale model (any of the 10 assigned archs), prefills a batch
-of prompts token-by-token, then decodes continuations with the jitted
-serve step — same code path the decode_32k / long_500k dry-run cells lower.
+Spins up a :class:`repro.serve.SamplingService` over a power-law graph and
+feeds it a burst of concurrent, heterogeneous requests — mixed algorithms
+(deepwalk / weighted / node2vec), mixed walk lengths, mixed seed-set sizes —
+then drains them through fused device launches and prints the per-request
+results plus the batching stats (launches vs requests, padding overhead).
 
-    PYTHONPATH=src python examples/serve_batch.py --arch gemma3-1b --tokens 32
+    PYTHONPATH=src python examples/serve_batch.py --requests 24
 
-With ``--oom`` the demo instead exercises the §V out-of-memory sampling
-path end-to-end: a power-law graph partitioned into 8 contiguous vertex
-ranges, walked through the device-resident frontier queues with only 2
-partitions resident at a time (DESIGN.md §8).
+With ``--oom`` the service instead holds the graph as 8 host-resident
+vertex-range partitions (2 resident at a time) and routes every cohort
+through the §V frontier-queue drain (DESIGN.md §8) — same submit/drain API,
+per-request ``depth_limits`` merged into one partition schedule.
 
     PYTHONPATH=src python examples/serve_batch.py --oom
+
+``--lm`` keeps the original language-model serving demo (prefill + decode
+with the KV/state cache on a smoke-scale arch):
+
+    PYTHONPATH=src python examples/serve_batch.py --lm --arch gemma3-1b
 """
 import argparse
 import time
@@ -21,49 +28,61 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def run_oom_demo(args) -> None:
-    """Smoke-scale out-of-memory walk: 8 partitions, 2 resident."""
+def run_sampling_service(args) -> None:
+    """Submit a burst of mixed requests, drain, report batching wins."""
     from repro.core import algorithms as alg
-    from repro.core.oom import oom_random_walk
     from repro.graph import powerlaw_graph
     from repro.graph.partition import partition_by_vertex_range
+    from repro.serve import SamplingService, ServiceConfig
 
-    g = powerlaw_graph(8192, seed=11, weighted=True)
-    parts = partition_by_vertex_range(g, 8)
-    seeds = np.random.default_rng(0).integers(0, g.num_vertices, args.batch * 32)
-    t0 = time.perf_counter()
-    walks, stats = oom_random_walk(
-        parts, g.num_vertices, seeds, jax.random.PRNGKey(0),
-        depth=args.tokens // 2, spec=alg.weighted_random_walk(),
-        max_degree=g.max_degree(), memory_capacity=2, chunk=256,
-    )
-    secs = time.perf_counter() - t0
-    done = (walks >= 0).sum(axis=1)
-    print(f"oom walk: {len(seeds)} instances x depth {args.tokens // 2} over "
-          f"{len(parts)} partitions (2 resident) in {secs*1e3:.0f} ms")
-    print(f"transfers={stats.partition_transfers} "
-          f"bytes={stats.bytes_transferred} kernels={stats.kernel_launches} "
-          f"sampled_edges={stats.sampled_edges} dropped={stats.frontier_dropped}")
-    print(f"mean walk length: {done.mean():.1f}")
-    print(f"sample walk (instance 0): {walks[0][:12].tolist()}")
-
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma3-1b")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--oom", action="store_true",
-                    help="run the out-of-memory graph sampling demo instead")
-    args = ap.parse_args()
+    g = powerlaw_graph(20_000, exponent=2.1, seed=0, weighted=True)
+    print(f"graph: V={g.num_vertices} E={g.num_edges} maxdeg={g.max_degree()}")
 
     if args.oom:
-        run_oom_demo(args)
-        return
+        parts = partition_by_vertex_range(g, 8)
+        svc = SamplingService(
+            partitions=parts, total_vertices=g.num_vertices,
+            backend=args.backend, oom_memory_capacity=2, oom_chunk=256,
+        )
+        print(f"mode: out-of-memory ({len(parts)} partitions, 2 resident)")
+    else:
+        svc = SamplingService(g, backend=args.backend, config=ServiceConfig())
+        print("mode: in-memory fused launches")
 
+    # a burst of heterogeneous requests, as independent users would send them
+    rng = np.random.default_rng(3)
+    specs = [alg.deepwalk(), alg.weighted_random_walk(), alg.node2vec()]
+    tickets = {}
+    for i in range(args.requests):
+        spec = specs[i % len(specs)]
+        n = int(rng.integers(16, 129))
+        depth = int(rng.choice([8, 12, 16, 24, 32]))
+        seeds = rng.integers(0, g.num_vertices, n)
+        rid = svc.submit(seeds, depth=depth, spec=spec)
+        tickets[rid] = (spec.name, n, depth)
+
+    t0 = time.perf_counter()
+    results = svc.drain()
+    secs = time.perf_counter() - t0
+
+    for rid in sorted(results)[:6]:
+        name, n, depth = tickets[rid]
+        r = results[rid]
+        print(f"  req {rid:2d} {name:12s} {n:4d} walkers x depth {depth:3d} "
+              f"-> mean len {r.lengths.mean():5.1f}, {r.sampled_edges} edges")
+    if len(results) > 6:
+        print(f"  ... {len(results) - 6} more requests")
+    s = svc.stats
+    launches = s.oom_launches if args.oom else s.launches
+    print(f"served {s.requests_served} requests / {s.walkers_served} walkers "
+          f"in {launches} launches ({secs*1e3:.0f} ms)")
+    print(f"padding overhead: {s.padded_walker_slots} ghost walker slots")
+
+
+def run_lm_demo(args) -> None:
+    """Original LM serving demo: prefill + decode with the KV/state cache."""
     from repro.configs import get_smoke_config
-    from repro.models import decode_step, init_cache, init_params
+    from repro.models import decode_step, init_cache, init_params  # noqa: F401
     from repro.train.train_step import make_serve_step
 
     cfg = get_smoke_config(args.arch)
@@ -99,6 +118,28 @@ def main() -> None:
     print(f"prefill: {args.prompt_len} steps in {prefill_s*1e3:.0f} ms")
     print(f"decode:  {args.tokens-1} steps in {decode_s*1e3:.0f} ms ({tput:.0f} tok/s)")
     print(f"sample continuation (request 0): {seqs[0][:16].tolist()}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24,
+                    help="number of concurrent sampling requests to submit")
+    ap.add_argument("--backend", default="auto",
+                    help="selection backend: auto/reference/pallas")
+    ap.add_argument("--oom", action="store_true",
+                    help="serve through the out-of-memory partition scheduler")
+    ap.add_argument("--lm", action="store_true",
+                    help="run the language-model serving demo instead")
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    if args.lm:
+        run_lm_demo(args)
+    else:
+        run_sampling_service(args)
 
 
 if __name__ == "__main__":

@@ -24,7 +24,13 @@ from repro.core.select import (
     select_without_replacement,
     walk_transition_chunked,
 )
-from repro.core.engine import SampleResult, WalkResult, random_walk, traversal_sample
+from repro.core.engine import (
+    SampleResult,
+    WalkResult,
+    random_walk,
+    random_walk_segments,
+    traversal_sample,
+)
 from repro.core import algorithms
 from repro.core import backend
 from repro.core import transition
@@ -58,6 +64,7 @@ __all__ = [
     "SampleResult",
     "WalkResult",
     "random_walk",
+    "random_walk_segments",
     "traversal_sample",
     "algorithms",
     "backend",

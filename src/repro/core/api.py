@@ -56,27 +56,83 @@ FlatEdgeBiasFn = Callable[[object], jax.Array]
 
 
 def uniform_vertex_bias(ctx: VertexCtx) -> jax.Array:
+    """Constant VERTEXBIAS: every frontier-pool candidate equally likely.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.api import VertexCtx, uniform_vertex_bias
+    >>> ctx = VertexCtx(v=jnp.array([3, 7]), deg=jnp.array([2, 5]),
+    ...                 depth=jnp.int32(0))
+    >>> uniform_vertex_bias(ctx)
+    Array([1., 1.], dtype=float32)
+    """
     return jnp.ones_like(ctx.v, dtype=jnp.float32)
 
 
 def degree_vertex_bias(ctx: VertexCtx) -> jax.Array:
+    """Degree-proportional VERTEXBIAS (MDRW frontier selection, paper Fig. 3b).
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.api import VertexCtx, degree_vertex_bias
+    >>> ctx = VertexCtx(v=jnp.array([3, 7]), deg=jnp.array([2, 5]),
+    ...                 depth=jnp.int32(0))
+    >>> degree_vertex_bias(ctx)
+    Array([2., 5.], dtype=float32)
+    """
     return ctx.deg.astype(jnp.float32)
 
 
+def _demo_edge_ctx():
+    """A 1-walker, 3-candidate EdgeCtx shared by the doctests below."""
+    return EdgeCtx(
+        v=jnp.array([0]),
+        u=jnp.array([[1, 2, -1]]),
+        weight=jnp.array([[0.5, 2.0, 0.0]]),
+        deg_v=jnp.array([2]),
+        deg_u=jnp.array([[3, 1, 0]]),
+        prev=jnp.array([-1]),
+        is_prev_neighbor=None,
+        depth=jnp.int32(0),
+    )
+
+
 def uniform_edge_bias(ctx: EdgeCtx) -> jax.Array:
+    """Constant EDGEBIAS: unbiased neighbor choice (DeepWalk).
+
+    >>> from repro.core.api import _demo_edge_ctx, uniform_edge_bias
+    >>> uniform_edge_bias(_demo_edge_ctx())
+    Array([[1., 1., 1.]], dtype=float32)
+    """
     return jnp.ones_like(ctx.u, dtype=jnp.float32)
 
 
 def weight_edge_bias(ctx: EdgeCtx) -> jax.Array:
+    """Edge-weight EDGEBIAS: transition probability ∝ edge weight.
+
+    >>> from repro.core.api import _demo_edge_ctx, weight_edge_bias
+    >>> weight_edge_bias(_demo_edge_ctx())
+    Array([[0.5, 2. , 0. ]], dtype=float32)
+    """
     return ctx.weight.astype(jnp.float32)
 
 
 def degree_edge_bias(ctx: EdgeCtx) -> jax.Array:
-    """Biased DeepWalk: neighbor degree as bias (paper §II-A)."""
+    """Biased DeepWalk: neighbor degree as bias (paper §II-A).
+
+    >>> from repro.core.api import _demo_edge_ctx, degree_edge_bias
+    >>> degree_edge_bias(_demo_edge_ctx())
+    Array([[3., 1., 0.]], dtype=float32)
+    """
     return ctx.deg_u.astype(jnp.float32)
 
 
 def identity_update(key: jax.Array, ctx: EdgeCtx, u: jax.Array) -> jax.Array:
+    """Default UPDATE: walk to the selected neighbor unchanged.
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.core.api import _demo_edge_ctx, identity_update
+    >>> identity_update(jax.random.PRNGKey(0), _demo_edge_ctx(), jnp.array([2]))
+    Array([2], dtype=int32)
+    """
     return u
 
 
@@ -86,6 +142,27 @@ class SamplingSpec:
 
     The (frontier_size, neighbor_size, per_vertex, ...) knobs realize the
     paper's Table I design space.
+
+    A custom algorithm is just hooks — here, transition bias ∝ weight²
+    (every unset knob keeps its paper default):
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.api import EdgeCtx, SamplingSpec
+    >>> spec = SamplingSpec(edge_bias=lambda ctx: jnp.square(ctx.weight),
+    ...                     name="hot_edges", track_visited=False)
+    >>> spec.name, spec.frontier_size, spec.neighbor_size
+    ('hot_edges', 1, 1)
+
+    An undeclared hook is opaque to the compiler, so the engines fall back
+    to the dense full-context gather; declaring what the hook consumes
+    (``transition=``) puts it on the degree-bucketed fast path:
+
+    >>> from repro.core.transition import lower
+    >>> lower(spec).mode
+    'opaque'
+    >>> from repro.core import algorithms as alg
+    >>> lower(alg.node2vec()).mode, lower(alg.deepwalk()).mode
+    ('window', 'flat')
     """
 
     vertex_bias: BiasFn = uniform_vertex_bias

@@ -198,6 +198,7 @@ def _drain(
     part: ResidentPartition,
     queues: frontier.FrontierQueues,
     walks: jax.Array,
+    limits: jax.Array,
     key: jax.Array,
     pid: jax.Array,
     budget: jax.Array,
@@ -218,7 +219,12 @@ def _drain(
     """Drain up to ``budget`` entries of queue ``pid``: one ``lax.scan`` over
     ``n_chunks`` fixed-size chunks.  Each chunk pops, takes one walk step for
     all popped entries, scatters results into ``walks``, and redistributes
-    survivors to their owning partitions' queues in one vectorized push."""
+    survivors to their owning partitions' queues in one vectorized push.
+
+    ``limits`` is the per-instance walk-length cap ``(I,)`` (the multi-request
+    segment path: heterogeneous requests packed into one instance axis each
+    stop at their own depth); ``depth`` stays the static bound that sizes
+    ``walks`` and the scan."""
     dev = part.dev
     num_parts = queues.num_partitions
     program = tp.lower(spec)
@@ -256,7 +262,7 @@ def _drain(
         num_inst = walks.shape[0]
         walks = walks.at[jnp.where(ok, inst, num_inst), d + 1].set(nxt, mode="drop")
         sampled = sampled + jnp.sum(ok.astype(jnp.int32))
-        cont = ok & (d + 1 < depth)
+        cont = ok & (d + 1 < limits[jnp.maximum(inst, 0)])
         npid = pid_of_device(nxt, range_size, num_parts)
         queues = frontier.push_many(queues, npid, nxt, inst, d + 1, v, cont)
         return (queues, walks, sampled, budget_left - taken), taken
@@ -296,6 +302,7 @@ def oom_random_walk(
     workload_aware: bool = True,
     balance: bool = True,
     backend: bk.Backend = "auto",
+    depth_limits: Optional[np.ndarray] = None,
 ) -> tuple[np.ndarray, OOMStats]:
     """Out-of-memory random walk over host-resident partitions.
 
@@ -305,6 +312,13 @@ def oom_random_walk(
     ``backend`` picks the selection/walk kernels exactly as in the in-memory
     engines; ``"pallas"`` and ``"reference"`` produce bit-identical walks and
     stats (shared counted RNG, DESIGN.md §4/§8).
+
+    ``depth_limits`` (optional ``(I,)``, values in ``[0, depth]``) is the
+    multi-request segment path: the batched service (``repro.serve``) packs
+    heterogeneous requests into one instance axis and each instance stops at
+    its own limit, so one drain serves mixed walk lengths.  ``seeds`` may be
+    ``-1`` (padding): those instances never enter a queue and emit all--1
+    rows.
     """
     num_parts = len(partitions)
     num_inst = len(seeds)
@@ -333,17 +347,34 @@ def oom_random_walk(
     stats = OOMStats()
     if depth < 1 or num_inst == 0:
         return np.asarray(walks), stats
+    if depth_limits is None:
+        limits = jnp.full((num_inst,), depth, jnp.int32)
+    else:
+        limits_np = np.asarray(depth_limits, dtype=np.int32)
+        if limits_np.shape != (num_inst,):
+            raise ValueError(
+                f"depth_limits shape {limits_np.shape} != (num_instances,) = ({num_inst},)"
+            )
+        if limits_np.size and (limits_np.min() < 0 or limits_np.max() > depth):
+            # limits above `depth` would keep entries circulating through
+            # the drain while every walks write past column `depth` is
+            # silently dropped — wasted budget and inflated sampled_edges
+            raise ValueError(
+                f"depth_limits must lie in [0, depth={depth}], got "
+                f"[{limits_np.min()}, {limits_np.max()}]"
+            )
+        limits = jnp.asarray(limits_np)
 
     cap = -(-max(chunk, num_inst) // 128) * 128
     queues = frontier.make_queues(num_parts, cap)
     queues = frontier.push_many(
         queues,
-        pm.pid_of_device(seeds32),
+        pm.pid_of_device(jnp.maximum(seeds32, 0)),
         seeds32,
         jnp.arange(num_inst, dtype=jnp.int32),
         jnp.zeros((num_inst,), jnp.int32),
         jnp.full((num_inst,), -1, jnp.int32),
-        jnp.ones((num_inst,), bool),
+        (seeds32 >= 0) & (limits > 0),
     )
 
     # pad every partition to one common shape => one drain trace serves all
@@ -397,7 +428,7 @@ def oom_random_walk(
                 kcall = jax.random.fold_in(key, call_idx)
                 left = budget if workload_aware else budget - processed
                 queues, walks, sampled, entries, remaining = drain(
-                    part, queues, walks, kcall, jnp.int32(pid), jnp.int32(left)
+                    part, queues, walks, limits, kcall, jnp.int32(pid), jnp.int32(left)
                 )
                 if not prefetched and i + 1 < len(active):
                     # double buffering: the drain above is dispatched but not

@@ -1,0 +1,35 @@
+"""Batched multi-instance sampling service (paper §V-C, lifted to requests).
+
+Front door for serving many concurrent, heterogeneous sampling requests:
+admission-controlled queueing, padding-bucket batching keyed on lowered
+transition programs, fused device launches, per-request results.  See
+``docs/api.md`` for the public surface and ``benchmarks/bench_serve.py``
+for the fused-vs-sequential throughput this layer buys.
+"""
+from repro.serve.queue import (
+    AdmissionError,
+    Cohort,
+    RequestQueue,
+    SamplingRequest,
+    ServiceConfig,
+    cohort_key,
+)
+from repro.serve.service import (
+    DrainError,
+    RequestResult,
+    SamplingService,
+    ServiceStats,
+)
+
+__all__ = [
+    "AdmissionError",
+    "DrainError",
+    "Cohort",
+    "RequestQueue",
+    "RequestResult",
+    "SamplingRequest",
+    "SamplingService",
+    "ServiceConfig",
+    "ServiceStats",
+    "cohort_key",
+]
