@@ -15,13 +15,28 @@ per-request ``depth_limits`` merged into one partition schedule.
 
     PYTHONPATH=src python examples/serve_batch.py --oom
 
+With ``--sharded`` the graph is range-sharded over a device mesh (8 forced
+host devices when no accelerators are present) and every cohort drains
+through the owner-routed frontier exchange (``repro.shard``, DESIGN.md
+§12) — per-device CSR footprint ∝ 1/D, walkers routed to the shard owning
+their frontier vertex each step:
+
+    PYTHONPATH=src python examples/serve_batch.py --sharded
+
 ``--lm`` keeps the original language-model serving demo (prefill + decode
 with the KV/state cache on a smoke-scale arch):
 
     PYTHONPATH=src python examples/serve_batch.py --lm --arch gemma3-1b
 """
 import argparse
+import os
+import sys
 import time
+
+# the sharded scenario needs a device mesh: force host devices BEFORE jax
+# initializes (a no-op when the platform already has real accelerators)
+if "--sharded" in sys.argv and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +60,13 @@ def run_sampling_service(args) -> None:
             backend=args.backend, oom_memory_capacity=2, oom_chunk=256,
         )
         print(f"mode: out-of-memory ({len(parts)} partitions, 2 resident)")
+    elif args.sharded:
+        ndev = jax.device_count()
+        mesh = jax.make_mesh((ndev,), ("data",))
+        svc = SamplingService(
+            g, mesh=mesh, placement="sharded", backend=args.backend,
+        )
+        print(f"mode: mesh-sharded ({ndev} devices, per-device CSR ~1/{ndev})")
     else:
         svc = SamplingService(g, backend=args.backend, config=ServiceConfig())
         print("mode: in-memory fused launches")
@@ -73,7 +95,11 @@ def run_sampling_service(args) -> None:
     if len(results) > 6:
         print(f"  ... {len(results) - 6} more requests")
     s = svc.stats
-    launches = s.oom_launches if args.oom else s.launches
+    launches = (
+        s.oom_launches if args.oom
+        else s.sharded_launches if args.sharded
+        else s.launches
+    )
     print(f"served {s.requests_served} requests / {s.walkers_served} walkers "
           f"in {launches} launches ({secs*1e3:.0f} ms)")
     print(f"padding overhead: {s.padded_walker_slots} ghost walker slots")
@@ -128,6 +154,9 @@ def main() -> None:
                     help="selection backend: auto/reference/pallas")
     ap.add_argument("--oom", action="store_true",
                     help="serve through the out-of-memory partition scheduler")
+    ap.add_argument("--sharded", action="store_true",
+                    help="serve over a device mesh via the owner-routed "
+                         "frontier exchange (forces 8 host devices on CPU)")
     ap.add_argument("--lm", action="store_true",
                     help="run the language-model serving demo instead")
     ap.add_argument("--arch", default="gemma3-1b")

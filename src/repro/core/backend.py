@@ -200,6 +200,8 @@ def walk_step_bucketed(
     buckets: tuple,
     use_chunked: bool,
     interpret: bool | None = None,
+    rand: jax.Array | None = None,
+    tail_rand: jax.Array | None = None,
 ) -> jax.Array:
     """One bias-weighted transition for all walkers, scheduled by degree.
 
@@ -208,12 +210,18 @@ def walk_step_bucketed(
     its :func:`pad_csr_for_kernel` output.  Walkers outside a cohort run with
     ``deg = 0`` (a dead-end no-op) and take their result from their own
     cohort.  Returns next vertices (W,) int32; -1 for finished walkers and
-    dead ends.
+    dead ends.  ``rand`` / ``tail_rand`` override the bucket / chunked-tail
+    uniforms (the mesh-sharded drain supplies instance-indexed draws so a
+    walker's pick matches the single-device stream wherever it runs,
+    DESIGN.md §12); the default draws stay ``fold_in(key, 0)`` /
+    ``fold_in(key, 1)``.
     """
     safe = jnp.maximum(cur, 0)
     starts = indptr[safe]
     deg = jnp.where(cur >= 0, indptr[safe + 1] - starts, 0)
-    r = jax.random.uniform(jax.random.fold_in(key, 0), cur.shape, dtype=jnp.float32)
+    if rand is None:
+        rand = jax.random.uniform(jax.random.fold_in(key, 0), cur.shape, dtype=jnp.float32)
+    r = rand
 
     nxt = jnp.full_like(cur, -1)
     lo = 0
@@ -239,16 +247,17 @@ def walk_step_bucketed(
 
     if use_chunked:
         nxt = _chunked_tail(
-            jax.random.fold_in(key, 1), indptr, indices, flat_bias, safe, deg, buckets[-1], nxt
+            jax.random.fold_in(key, 1), indptr, indices, flat_bias, safe, deg, buckets[-1], nxt,
+            rand=tail_rand,
         )
     return nxt
 
 
-def _chunked_tail(key, indptr, indices, flat_bias, safe, deg, seg_hi, nxt):
+def _chunked_tail(key, indptr, indices, flat_bias, safe, deg, seg_hi, nxt, rand=None):
     """Route walkers with ``deg > seg_hi`` through the two-pass chunked scan."""
     huge = deg > seg_hi
     safe_cur = jnp.where(huge, safe, 0)
-    off = sel.walk_transition_chunked(key, indptr, flat_bias, safe_cur, chunk=CHUNK)
+    off = sel.walk_transition_chunked(key, indptr, flat_bias, safe_cur, chunk=CHUNK, rand=rand)
     eidx = jnp.clip(indptr[safe_cur] + jnp.maximum(off, 0), 0, indices.shape[0] - 1)
     cand = jnp.where(off >= 0, indices[eidx], -1)
     return jnp.where(huge, cand, nxt)
@@ -265,6 +274,8 @@ def walk_step_flat_reference(
     buckets: tuple,
     use_chunked: bool,
     max_degree: int | None = None,
+    rand: jax.Array | None = None,
+    tail_rand: jax.Array | None = None,
 ) -> jax.Array:
     """Pure-jnp mirror of :func:`walk_step_bucketed` — same bits, same picks.
 
@@ -285,7 +296,9 @@ def walk_step_flat_reference(
     safe = jnp.maximum(cur, 0)
     starts = indptr[safe]
     deg = jnp.where(cur >= 0, indptr[safe + 1] - starts, 0)
-    r = jax.random.uniform(jax.random.fold_in(key, 0), cur.shape, dtype=jnp.float32)
+    if rand is None:
+        rand = jax.random.uniform(jax.random.fold_in(key, 0), cur.shape, dtype=jnp.float32)
+    r = rand
 
     nxt = jnp.full_like(cur, -1)
     lo = 0
@@ -305,7 +318,8 @@ def walk_step_flat_reference(
 
     if use_chunked:
         nxt = _chunked_tail(
-            jax.random.fold_in(key, 1), indptr, indices, flat_bias, safe, deg, buckets[-1], nxt
+            jax.random.fold_in(key, 1), indptr, indices, flat_bias, safe, deg, buckets[-1], nxt,
+            rand=tail_rand,
         )
     return nxt
 
@@ -346,6 +360,8 @@ def walk_step_bucketed_window(
     use_chunked: bool,
     backend: str,
     interpret: bool | None = None,
+    rand: jax.Array | None = None,
+    tail_rand: jax.Array | None = None,
 ) -> jax.Array:
     """One dynamic-bias transition for all walkers, scheduled by degree.
 
@@ -376,7 +392,9 @@ def walk_step_bucketed_window(
     safe = jnp.maximum(cur, 0)
     starts = indptr[safe]
     deg = jnp.where(cur >= 0, indptr[safe + 1] - starts, 0)
-    r = jax.random.uniform(jax.random.fold_in(key, 0), cur.shape, dtype=jnp.float32)
+    if rand is None:
+        rand = jax.random.uniform(jax.random.fold_in(key, 0), cur.shape, dtype=jnp.float32)
+    r = rand
 
     nxt = jnp.full_like(cur, -1)
     lo = 0
@@ -419,7 +437,7 @@ def walk_step_bucketed_window(
         safe_cur = jnp.where(huge, safe, 0)
         off = sel.walk_transition_chunked_window(
             jax.random.fold_in(key, 1), indptr, indices, weights, safe_cur, bias_of,
-            chunk=CHUNK,
+            chunk=CHUNK, rand=tail_rand,
         )
         eidx = jnp.clip(indptr[safe_cur] + jnp.maximum(off, 0), 0, indices.shape[0] - 1)
         cand = jnp.where(off >= 0, indices[eidx], -1)

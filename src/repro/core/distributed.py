@@ -4,32 +4,30 @@ Paper-faithful mode — ``instance_parallel_walk``: sampling instances are
 split into equal disjoint groups across devices, the graph is replicated,
 and *no* inter-device communication happens (the paper's multi-GPU design).
 
-Beyond-paper mode — ``graph_sharded_walk``: the CSR is range-partitioned
-across devices (each device owns a contiguous vertex range, HBM use scales
-1/D); walker state is replicated and advanced with a per-step ``psum`` of
-owner-computed successors.  This is what a 1000+ node deployment needs when
-the graph exceeds a single HBM; at extreme scale the psum over walker state
-would become a ragged all_to_all, which we document rather than emulate.
+Beyond-paper mode — graph sharding: the CSR is range-partitioned across
+devices (each device owns a contiguous vertex range, HBM use scales 1/D)
+and walkers are ROUTED to the shard owning their frontier vertex each step.
+That owner-routed frontier-exchange engine lives in ``repro.shard``
+(DESIGN.md §12); :func:`graph_sharded_walk` survives here as a thin
+compatibility wrapper over it.
 """
 from __future__ import annotations
 
 import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.api import SamplingSpec
-from repro.core import select as sel
-from repro.core import transition as tp
-from repro.core.engine import WalkResult, _edge_ctx, random_walk
+from repro.core.engine import WalkResult, random_walk
 from repro.distributed.sharding import shard_map_compat
 from repro.graph.csr import CSRGraph
-from repro.graph.partition import PartitionMap, partition_by_vertex_range
-
-
+from repro.shard.walk import (  # noqa: F401  (re-exported for compatibility)
+    replicated_psum_walk,
+    shard_graph_for_mesh,
+    sharded_random_walk,
+)
 
 
 def instance_parallel_walk(
@@ -52,40 +50,19 @@ def instance_parallel_walk(
         out_specs=WalkResult(P(axis), P(axis), P()),
     )
     def _run(graph, seeds, key):
-        # fold in the device index so instance groups draw independent randoms
+        # fold the axis SIZE, then the device index, into the key: device d
+        # of a D-way mesh draws from stream (D, d), so the same seeds on 4-
+        # and 8-device meshes use provably disjoint streams (distinct (D, d)
+        # pairs), instead of device d colliding across mesh widths
         didx = jax.lax.axis_index(axis)
-        res = random_walk(graph, seeds, jax.random.fold_in(key, didx),
+        ndev = jnp.int32(mesh.shape[axis])  # static: mesh is closed over
+        kdev = jax.random.fold_in(jax.random.fold_in(key, ndev), didx)
+        res = random_walk(graph, seeds, kdev,
                           depth=depth, spec=spec, max_degree=max_degree)
         return WalkResult(res.walks, res.lengths,
                           jax.lax.psum(res.sampled_edges, axis))
 
     return _run(graph, seeds, key)
-
-
-def shard_graph_for_mesh(graph: CSRGraph, num_devices: int):
-    """Range-partition a CSR into per-device stacked local CSRs.
-
-    Returns (indptr_stack (D, V+1), indices_stack (D, Emax), weights_stack)
-    where each device's slice covers the full vertex-id space with empty rows
-    for unowned vertices (so global ids index directly) and edge arrays are
-    padded to the max partition size.
-    """
-    parts = partition_by_vertex_range(graph, num_devices)
-    v = graph.num_vertices
-    emax = max(p.num_edges for p in parts)
-    indptrs, indices, weights = [], [], []
-    for p in parts:
-        full = np.zeros(v + 1, np.int32)
-        full[p.vertex_lo + 1 : p.vertex_hi + 1] = p.indptr[1:]
-        full[p.vertex_hi + 1 :] = p.indptr[-1]
-        indptrs.append(full)
-        indices.append(np.pad(p.indices, (0, emax - p.num_edges), constant_values=0).astype(np.int32))
-        weights.append(np.pad(p.weights, (0, emax - p.num_edges)).astype(np.float32))
-    return (
-        jnp.asarray(np.stack(indptrs)),
-        jnp.asarray(np.stack(indices)),
-        jnp.asarray(np.stack(weights)),
-    )
 
 
 def graph_sharded_walk(
@@ -99,60 +76,18 @@ def graph_sharded_walk(
     max_degree: int,
     axis: str = "data",
 ) -> jax.Array:
-    """Walk over a device-sharded graph: owners advance, psum merges.
+    """Compatibility wrapper: walks over a device-sharded graph.
 
-    Returns walks (I, depth+1).  Per step each device computes successors for
-    walkers whose current vertex it owns (others contribute zeros) and a
-    single integer psum replicates the advanced state.
+    Returns walks (I, depth+1).  Delegates to
+    :func:`repro.shard.sharded_random_walk` — the owner-routed
+    frontier-exchange engine (per-device HBM ∝ 1/D, one ``all_to_all`` per
+    round, bit-identical to single-device ``random_walk`` for flat- and
+    window-bias programs).  Specs outside that envelope take its
+    replicated-``psum`` fallback, the design this wrapper used to implement
+    inline.
     """
-    ndev = mesh.shape[axis]
-    nvert = graph.num_vertices
-    program = tp.lower(spec)
-    indptr_s, indices_s, weights_s = shard_graph_for_mesh(graph, ndev)
-    # same cached bounds the partitioner used — lo/hi must match the shards
-    bounds = PartitionMap.create(nvert, ndev).bounds.astype(np.int32)
-    lo = jnp.asarray(bounds[:-1])
-    hi = jnp.asarray(bounds[1:])
-
-    @functools.partial(
-        shard_map_compat,
-        mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(), P()),
-        out_specs=P(),
+    res = sharded_random_walk(
+        mesh, graph, seeds, key,
+        depth=depth, spec=spec, max_degree=max_degree, axis=axis,
     )
-    def _run(indptr, indices, wts, lo, hi, seeds, key):
-        local = CSRGraph(indptr[0], indices[0], wts[0])
-        lo0, hi0 = lo[0], hi[0]
-        home = seeds.astype(jnp.int32) if program.carries_home else None
-
-        def step(carry, it):
-            cur, prev = carry
-            own = (cur >= lo0) & (cur < hi0)
-            safe = jnp.where(own, cur, lo0)  # in-range dummy for gathers
-            ctx, mask = _edge_ctx(local, safe, prev, it, max_degree, spec.needs_prev_neighbors)
-            biases = jnp.where(mask, spec.edge_bias(ctx), 0.0)
-            kstep = jax.random.fold_in(key, it)  # same key on all devices
-            idx = sel.select_with_replacement(jax.random.fold_in(kstep, 1), biases, mask, 1)[..., 0]
-            u = jnp.take_along_axis(ctx.u, idx[..., None], axis=-1)[..., 0]
-            alive = own & (cur >= 0) & jnp.any(mask, axis=-1)
-            # post-select update through the lowered epilogue (shared with
-            # the in-memory engines and the OOM drain, DESIGN.md §10)
-            u = jnp.where(
-                alive,
-                tp.apply_epilogue(
-                    jax.random.fold_in(kstep, 2), program, spec, ctx, u, home
-                ),
-                -1,
-            )
-            contrib = jnp.where(own, jnp.where(alive, u, -1), 0)
-            dead = jax.lax.psum(jnp.where(own, jnp.where(alive, 0, 1), 0), axis)
-            nxt = jax.lax.psum(contrib, axis)  # exactly one owner contributes
-            nxt = jnp.where((dead > 0) | (cur < 0), -1, nxt)
-            return (nxt, cur), nxt
-
-        (_, _), path = jax.lax.scan(
-            step, (seeds.astype(jnp.int32), jnp.full(seeds.shape, -1, jnp.int32)), jnp.arange(depth)
-        )
-        return jnp.concatenate([seeds[None].astype(jnp.int32), path], 0).T
-
-    return _run(indptr_s, indices_s, weights_s, lo, hi, seeds, key)
+    return res.walks

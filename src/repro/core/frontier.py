@@ -78,6 +78,28 @@ def make_queues(num_partitions: int, capacity: int) -> FrontierQueues:
     )
 
 
+def owner_compaction(pid: jax.Array, valid: jax.Array, num_buckets: int):
+    """The cumsum owner-bucketing core shared by queue pushes and the
+    mesh-exchange routing (``repro.shard.exchange``).
+
+    A stable sort by owner groups valid entries per bucket in batch order;
+    gathers replace scatters throughout (XLA CPU scatter is serialized).
+    Returns ``(order, adds, offset)``: the grouping permutation over the
+    ``(E,)`` batch, the per-bucket entry counts ``(B,)``, and the start of
+    each bucket's group within the sorted batch ``(B,)`` — enough to place
+    sorted entry ``order[offset[b] + s]`` at slot ``s`` of bucket ``b``.
+    Invalid entries sort last (bucket id ``num_buckets``).
+    """
+    pidv = jnp.where(valid, pid, num_buckets)
+    order = jnp.argsort(pidv)
+    adds = jnp.sum(
+        (pidv[:, None] == jnp.arange(num_buckets, dtype=pidv.dtype)).astype(jnp.int32),
+        axis=0,
+    )
+    offset = jnp.cumsum(adds) - adds
+    return order, adds, offset
+
+
 def push_many(
     q: FrontierQueues,
     pid: jax.Array,
@@ -97,15 +119,7 @@ def push_many(
     """
     num_parts, cap = q.vertex.shape
     num_entries = pid.shape[0]
-    # stable sort by owner groups valid entries per partition in batch order;
-    # gathers replace scatters throughout (XLA CPU scatter is serialized)
-    pidv = jnp.where(valid, pid, num_parts)  # invalid entries sort last
-    order = jnp.argsort(pidv)
-    adds = jnp.sum(
-        (pidv[:, None] == jnp.arange(num_parts, dtype=pidv.dtype)).astype(jnp.int32),
-        axis=0,
-    )
-    offset = jnp.cumsum(adds) - adds  # start of each partition's sorted group
+    order, adds, offset = owner_compaction(pid, valid, num_parts)
     # slot (p, s) receives sorted entry offset[p] + (s - count[p]) when that
     # lands inside this batch's group for p; otherwise keeps its old value
     j = jnp.arange(cap, dtype=jnp.int32)[None, :] - q.count[:, None]  # (P, cap)

@@ -303,6 +303,8 @@ def oom_random_walk(
     balance: bool = True,
     backend: bk.Backend = "auto",
     depth_limits: Optional[np.ndarray] = None,
+    queue_capacity: Optional[int] = None,
+    strict: bool = False,
 ) -> tuple[np.ndarray, OOMStats]:
     """Out-of-memory random walk over host-resident partitions.
 
@@ -319,6 +321,14 @@ def oom_random_walk(
     its own limit, so one drain serves mixed walk lengths.  ``seeds`` may be
     ``-1`` (padding): those instances never enter a queue and emit all--1
     rows.
+
+    ``queue_capacity`` overrides the per-partition frontier-queue capacity
+    (default: sized to hold the whole instance population, which makes
+    overflow impossible — every live instance has at most one queued entry).
+    Capacity overflow on :func:`frontier.push_many` silently loses walkers
+    (their rows freeze at the drop point); the count is always propagated to
+    ``stats.frontier_dropped``, and ``strict=True`` turns a nonzero count
+    into an immediate ``RuntimeError`` instead of a quietly short result.
     """
     num_parts = len(partitions)
     num_inst = len(seeds)
@@ -365,7 +375,13 @@ def oom_random_walk(
             )
         limits = jnp.asarray(limits_np)
 
-    cap = -(-max(chunk, num_inst) // 128) * 128
+    cap = (
+        int(queue_capacity)
+        if queue_capacity is not None
+        else -(-max(chunk, num_inst) // 128) * 128
+    )
+    if cap < 1:
+        raise ValueError(f"queue_capacity must be >= 1, got {cap}")
     queues = frontier.make_queues(num_parts, cap)
     queues = frontier.push_many(
         queues,
@@ -452,4 +468,12 @@ def oom_random_walk(
     stats.partition_transfers = engine.stats_transfers
     stats.bytes_transferred = engine.stats_bytes
     stats.frontier_dropped = int(jax.device_get(queues.dropped))
+    if strict and stats.frontier_dropped:
+        raise RuntimeError(
+            f"frontier queues dropped {stats.frontier_dropped} walker "
+            f"entries to capacity overflow (queue_capacity={cap}, "
+            f"{num_parts} partitions, {num_inst} instances): their walks "
+            f"are silently truncated — raise queue_capacity or run with "
+            f"strict=False to accept the counted loss"
+        )
     return np.asarray(walks), stats

@@ -258,13 +258,16 @@ def walk_transition_chunked(
     weights: jax.Array,
     cur: jax.Array,
     chunk: int = 512,
+    rand: jax.Array | None = None,
 ) -> jax.Array:
     """One weighted ITS draw per walker over arbitrarily large neighbor rows.
 
     Two-pass chunked scan (DESIGN.md §2): pass 1 accumulates the row total,
     pass 2 locates the chunk+offset where the cumulative bias crosses
     ``r * total``.  Returns the *edge offset* within each row (int32), or -1
-    for dead ends.  O(max_deg/chunk) steps, fixed memory.
+    for dead ends.  O(max_deg/chunk) steps, fixed memory.  ``rand`` overrides
+    the per-walker uniforms (the mesh-sharded drain supplies instance-indexed
+    draws so picks match the single-device stream, DESIGN.md §12).
     """
     start = indptr[cur]
     deg = indptr[cur + 1] - start
@@ -284,7 +287,7 @@ def walk_transition_chunked(
         return jax.lax.cond(c < nchunks, lambda t: chunk_sum(c, t), lambda t: t, tot)
 
     total = jax.lax.fori_loop(0, max_iters, p1_body, jnp.zeros(cur.shape, jnp.float32))
-    r = jax.random.uniform(key, cur.shape, dtype=jnp.float32)
+    r = jax.random.uniform(key, cur.shape, dtype=jnp.float32) if rand is None else rand
     target = r * total
 
     def p2_body(c, carry):
@@ -320,6 +323,7 @@ def walk_transition_chunked_window(
     cur: jax.Array,
     bias_of,
     chunk: int = 512,
+    rand: jax.Array | None = None,
 ) -> jax.Array:
     """Dynamic-bias variant of :func:`walk_transition_chunked`.
 
@@ -354,7 +358,7 @@ def walk_transition_chunked_window(
         return jax.lax.cond(c < nchunks, step, lambda t: t, tot)
 
     total = jax.lax.fori_loop(0, max_iters, p1_body, jnp.zeros(cur.shape, jnp.float32))
-    r = jax.random.uniform(key, cur.shape, dtype=jnp.float32)
+    r = jax.random.uniform(key, cur.shape, dtype=jnp.float32) if rand is None else rand
     target = r * total
 
     def p2_body(c, carry):

@@ -129,6 +129,9 @@ class RangePartition:
     indptr: np.ndarray
     indices: np.ndarray
     weights: np.ndarray
+    # Global edge offset of this partition's first edge in the source CSR —
+    # lets device layouts preserve global block alignment (``edge_align``).
+    edge_lo: int = 0
 
     @property
     def num_vertices(self) -> int:
@@ -142,6 +145,7 @@ class RangePartition:
         self,
         pad_vertices: Optional[int] = None,
         pad_edges: Optional[int] = None,
+        edge_align: int = 0,
     ) -> DevicePartition:
         """Materialize the compact O(V/P + E_P) device CSR.
 
@@ -151,22 +155,32 @@ class RangePartition:
         both unreachable through masked semantics.  The one device_put of
         the host staging arrays is the DMA (async on real accelerators —
         the TransferEngine's double buffering hinges on it).
+
+        ``edge_align`` > 0 prepends ``edge_lo % edge_align`` inert edges so
+        every row keeps its *global* block offset (``start % edge_align``
+        unchanged by the rebase).  The degree-bucketed pick kernels cumsum
+        over block-aligned windows whose float association is fixed by the
+        within-block position, so preserving the offset is what makes a
+        partition-local pick bit-identical to the full-graph pick
+        (DESIGN.md §12); the mesh-sharded walk passes the largest bucket
+        segment (every smaller segment divides it).
         """
         nv = self.num_vertices
+        lead = (self.edge_lo % edge_align) if edge_align > 0 else 0
         pv = max(pad_vertices or nv, nv)
-        pe = max(pad_edges or self.num_edges, self.num_edges)
+        pe = max(pad_edges or (lead + self.num_edges), lead + self.num_edges)
         indptr = np.empty(pv + 2, dtype=np.int32)  # pv rows + phantom sink
-        indptr[: nv + 1] = self.indptr
-        indptr[nv + 1 :] = self.indptr[-1]
+        indptr[: nv + 1] = self.indptr + lead
+        indptr[nv + 1 :] = self.indptr[-1] + lead
         u_loc = self.indices.astype(np.int64) - self.vertex_lo
         in_part = (u_loc >= 0) & (u_loc < nv)
         indices_local = np.where(in_part, u_loc, pv).astype(np.int32)
-        epad = pe - self.num_edges
-        indices_local = np.pad(indices_local, (0, epad), constant_values=pv)
+        epad = pe - self.num_edges - lead
+        indices_local = np.pad(indices_local, (lead, epad), constant_values=pv)
         indices_global = np.pad(
-            self.indices.astype(np.int32), (0, epad), constant_values=-1
+            self.indices.astype(np.int32), (lead, epad), constant_values=-1
         )
-        weights = np.pad(self.weights.astype(np.float32), (0, epad))
+        weights = np.pad(self.weights.astype(np.float32), (lead, epad))
         ip_d, il_d, ig_d, w_d = jax.device_put((indptr, indices_local, indices_global, weights))
         return DevicePartition(
             graph=CSRGraph(indptr=ip_d, indices=il_d, weights=w_d),
@@ -196,6 +210,7 @@ def partition_by_vertex_range(graph: CSRGraph, num_partitions: int) -> List[Rang
                 indptr=local_indptr,
                 indices=indices[e_lo:e_hi].copy(),
                 weights=weights[e_lo:e_hi].copy(),
+                edge_lo=e_lo,
             )
         )
     return parts

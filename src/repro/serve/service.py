@@ -40,6 +40,7 @@ from typing import Dict, List, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.core.api import SamplingSpec
 from repro.core import backend as bk
@@ -47,6 +48,7 @@ from repro.core.engine import random_walk, random_walk_segments
 from repro.core.oom import oom_random_walk
 from repro.graph.csr import CSRGraph
 from repro.graph.partition import RangePartition
+from repro.shard.walk import sharded_random_walk
 from repro.serve.queue import (
     AdmissionError,
     Cohort,
@@ -88,6 +90,7 @@ class ServiceStats:
     walkers_served: int = 0
     launches: int = 0  # fused in-memory launches
     oom_launches: int = 0  # partition-scheduler passes
+    sharded_launches: int = 0  # device-mesh frontier-exchange drains
     padded_walker_slots: int = 0  # launched slots minus real walkers
 
 
@@ -107,20 +110,22 @@ class SamplingService:
     Construct with EITHER an in-memory ``graph`` (requests run through the
     fused ``random_walk_segments`` path) OR host-resident ``partitions`` +
     ``total_vertices`` (requests run through the §V out-of-memory
-    frontier-queue drain).  ``submit()`` admits a request (raising
-    :class:`~repro.serve.queue.AdmissionError` over capacity) and returns a
-    request id; ``drain()`` serves everything pending and returns
+    frontier-queue drain) OR a ``graph`` plus ``mesh`` and
+    ``placement="sharded"`` (the graph is range-sharded over the mesh and
+    cohorts run through the owner-routed frontier exchange,
+    ``repro.shard`` / DESIGN.md §12).  ``submit()`` admits a request
+    (raising :class:`~repro.serve.queue.AdmissionError` over capacity) and
+    returns a request id; ``drain()`` serves everything pending and returns
     ``{request_id: RequestResult}``.
 
     On the in-memory path each request gets its own PRNG key (derived from
     the service key and the request id unless passed explicitly), so a
     request's result does not depend on which other requests happen to
-    share its launch.  OOM-routed cohorts are different by construction:
-    the frontier-queue drain mixes entries of all member requests into
-    shared chunks, so one launch-level key drives the whole pass —
-    results are deterministic for a fixed submission set but NOT
-    composition-independent, and per-request ``key=`` values are unused
-    there (see DESIGN.md §11).
+    share its launch.  OOM- and shard-routed cohorts are different by
+    construction: both merge all member requests into one flat instance
+    axis under a single launch-level key, so results are deterministic for
+    a fixed submission set but NOT composition-independent, and per-request
+    ``key=`` values are unused there (see DESIGN.md §11/§12).
     """
 
     def __init__(
@@ -137,11 +142,37 @@ class SamplingService:
         oom_memory_capacity: int = 2,
         oom_num_streams: int = 2,
         oom_chunk: int = 1024,
+        mesh: Optional[Mesh] = None,
+        placement: Optional[str] = None,
+        shard_axis: str = "data",
     ):
         if (graph is None) == (partitions is None):
             raise ValueError(
-                "pass exactly one of graph= (in-memory) or partitions= (out-of-memory)"
+                "pass exactly one of graph= (in-memory / sharded) or "
+                "partitions= (out-of-memory)"
             )
+        if placement is None:
+            placement = "oom" if partitions is not None else (
+                "sharded" if mesh is not None else "memory"
+            )
+        if placement not in ("memory", "oom", "sharded"):
+            raise ValueError(f"unknown placement {placement!r}")
+        if placement == "sharded" and (graph is None or mesh is None):
+            raise ValueError('placement="sharded" needs graph= and mesh=')
+        if placement != "sharded" and mesh is not None:
+            # a mesh the service would silently never use means the caller
+            # configured one execution path and got another
+            raise ValueError(
+                f'mesh= is only meaningful with placement="sharded", '
+                f"got placement={placement!r}"
+            )
+        if placement == "oom" and partitions is None:
+            raise ValueError('placement="oom" needs partitions=')
+        if placement == "memory" and graph is None:
+            raise ValueError('placement="memory" needs graph=')
+        self.placement = placement
+        self.mesh = mesh
+        self.shard_axis = shard_axis
         self.graph = graph
         self.partitions = partitions
         if graph is not None:
@@ -231,11 +262,13 @@ class SamplingService:
         silently dropped.
         """
         out: Dict[int, RequestResult] = {}
-        cohorts = self._queue.take_cohorts(bucket_by_shape=self.partitions is None)
+        cohorts = self._queue.take_cohorts(bucket_by_shape=self.placement == "memory")
         for i, cohort in enumerate(cohorts):
             try:
-                if self.partitions is not None:
+                if self.placement == "oom":
                     self._run_oom(cohort, out)
+                elif self.placement == "sharded":
+                    self._run_sharded(cohort, out)
                 elif self.config.fuse:
                     self._run_fused(cohort, out)
                 else:
@@ -300,12 +333,13 @@ class SamplingService:
             self.stats.launches += 1
             self.stats.padded_walker_slots += cohort.width - req.num_walkers
 
-    def _run_oom(self, cohort: Cohort, out: Dict[int, RequestResult]) -> None:
-        """Route one cohort through the §V frontier-queue drain: member
-        requests merge into one flat instance axis (per-instance
-        ``depth_limits`` let mixed walk lengths share the partition
-        schedule), padded to a power-of-two instance count so recurring
-        cohort shapes reuse the drain trace."""
+    def _pack_flat(self, cohort: Cohort) -> tuple:
+        """Merge a cohort's requests into one flat instance axis: ``-1``-
+        padded seeds and per-instance ``depth_limits`` (power-of-two
+        instance count so recurring cohort shapes reuse the drain trace),
+        plus ``(request, row offset)`` spans for unpacking and the
+        launch-level key (one per partition-scheduling pass — the OOM and
+        sharded drains key per launch, not per request)."""
         total = cohort.num_walkers
         i_pad = _pow2_bucket(total, 128)
         seeds = np.full((i_pad,), -1, np.int32)
@@ -319,14 +353,41 @@ class SamplingService:
             spans.append((req, at))
             at += n
         self._oom_launch += 1
+        key = jax.random.fold_in(self._oom_key, self._oom_launch)
+        return seeds, limits, spans, key, i_pad - total
+
+    @staticmethod
+    def _unpack_flat(spans, walks: np.ndarray, out: Dict[int, RequestResult]) -> None:
+        for req, at in spans:
+            out[req.request_id] = _slice_result(req, walks[at : at + req.num_walkers])
+
+    def _run_oom(self, cohort: Cohort, out: Dict[int, RequestResult]) -> None:
+        """Route one cohort through the §V frontier-queue drain: member
+        requests merge into one flat instance axis (per-instance
+        ``depth_limits`` let mixed walk lengths share the partition
+        schedule)."""
+        seeds, limits, spans, key, ghost = self._pack_flat(cohort)
         walks, _stats = oom_random_walk(
-            self.partitions, self.num_vertices, seeds,
-            jax.random.fold_in(self._oom_key, self._oom_launch),
+            self.partitions, self.num_vertices, seeds, key,
             depth=cohort.depth, spec=cohort.requests[0].spec,
             max_degree=self.max_degree, backend=self.backend,
             depth_limits=limits, **self._oom_kwargs,
         )
-        for req, at in spans:
-            out[req.request_id] = _slice_result(req, walks[at : at + req.num_walkers])
+        self._unpack_flat(spans, walks, out)
         self.stats.oom_launches += 1
-        self.stats.padded_walker_slots += i_pad - total
+        self.stats.padded_walker_slots += ghost
+
+    def _run_sharded(self, cohort: Cohort, out: Dict[int, RequestResult]) -> None:
+        """Route one cohort through the owner-routed mesh drain
+        (``repro.shard``, DESIGN.md §12): same flat-instance-axis packing
+        and launch-key contract as the OOM path."""
+        seeds, limits, spans, key, ghost = self._pack_flat(cohort)
+        res = sharded_random_walk(
+            self.mesh, self.graph, seeds, key,
+            depth=cohort.depth, spec=cohort.requests[0].spec,
+            max_degree=self.max_degree, axis=self.shard_axis,
+            backend=self.backend, depth_limits=limits,
+        )
+        self._unpack_flat(spans, np.asarray(res.walks), out)
+        self.stats.sharded_launches += 1
+        self.stats.padded_walker_slots += ghost

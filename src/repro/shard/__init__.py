@@ -1,0 +1,35 @@
+"""Device-mesh sharded sampling: owner-routed frontier exchange (§V-D).
+
+Range-sharded graphs as a first-class execution target: each mesh device
+holds one compact partition CSR (HBM ∝ 1/D) and walkers are ROUTED to the
+shard owning their frontier vertex each step — fixed-capacity per-
+destination compaction, one ``all_to_all``, overflow deferred rather than
+dropped.  Flat- and window-bias transition programs reproduce single-device
+``engine.random_walk`` bit for bit on both backends; see DESIGN.md §12 and
+``docs/api.md`` for the contract.
+"""
+from repro.shard.exchange import (
+    ShardQueue,
+    all_to_all_fields,
+    make_queue,
+    queue_pop,
+    queue_push,
+    route_by_owner,
+)
+from repro.shard.walk import (
+    replicated_psum_walk,
+    shard_graph_for_mesh,
+    sharded_random_walk,
+)
+
+__all__ = [
+    "ShardQueue",
+    "all_to_all_fields",
+    "make_queue",
+    "queue_pop",
+    "queue_push",
+    "replicated_psum_walk",
+    "route_by_owner",
+    "shard_graph_for_mesh",
+    "sharded_random_walk",
+]

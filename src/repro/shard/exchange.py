@@ -1,0 +1,199 @@
+"""Fixed-capacity owner routing: the mesh frontier-exchange layer (§V-D).
+
+FlexiWalker and ThunderRW both land on the same multi-GPU shape: route
+*walkers to the shard that owns their frontier vertex* instead of
+broadcasting walker state.  This module is that routing layer for a JAX
+device mesh, built from three fixed-shape array programs so the whole
+exchange traces into the sharded drain's ``lax.scan``:
+
+- :class:`ShardQueue` + :func:`queue_push` / :func:`queue_pop` — one
+  front-packed frontier queue per device (the single-partition counterpart
+  of ``core.frontier.FrontierQueues``), generic over an entry's *fields*
+  (vertex, instance, depth, prev, and any carried transition state such as
+  the previous vertex's neighbor row).
+- :func:`route_by_owner` — bucket a batch of live entries by destination
+  shard with the cumsum owner-compaction machinery from ``core.frontier``
+  (:func:`repro.core.frontier.owner_compaction`), compacting each
+  destination's entries into a fixed ``(D, slots)`` send buffer.  Entries
+  past a destination's ``slots`` are NOT dropped: they come back as a
+  front-packed *leftover* batch the caller re-offers next round (the
+  deferred-emigrant drain policy, DESIGN.md §12).
+- :func:`all_to_all_fields` — the one collective: a tiled
+  ``lax.all_to_all`` per field inside ``shard_map`` (row ``p`` of the
+  result is the batch device ``p`` addressed to us).
+
+Everything is gathers + one stable sort per call — no scatters (serialized
+on CPU XLA), mirroring the §V frontier-queue implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.frontier import owner_compaction
+
+#: fill value of empty slots in every int32 entry field
+EMPTY = -1
+
+
+def _fill_like(arr: jax.Array) -> jax.Array:
+    return jnp.full((), EMPTY, arr.dtype)
+
+
+def _masked(mask: jax.Array, vals: jax.Array) -> jax.Array:
+    """Broadcast a slot mask over a field's trailing payload dims."""
+    m = mask.reshape(mask.shape + (1,) * (vals.ndim - mask.ndim))
+    return jnp.where(m, vals, _fill_like(vals))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ShardQueue:
+    """One device's frontier queue: front-packed fixed-capacity field arrays.
+
+    ``fields``: tuple of ``(cap,)`` or ``(cap, K)`` arrays — one per entry
+    field, all front-packed together (``-1`` = empty slot).  By convention
+    field 1 is the instance id, whose non-negativity marks a live entry.
+    ``count``: ``()`` live entries; ``dropped``: ``()`` entries lost to
+    capacity overflow on push (zero whenever ``cap`` covers the live walker
+    population — the sharded walk sizes it so, DESIGN.md §12).
+    """
+
+    fields: Tuple[jax.Array, ...]
+    count: jax.Array
+    dropped: jax.Array
+
+    def tree_flatten(self):
+        return (self.fields, self.count, self.dropped), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return self.fields[0].shape[0]
+
+
+def make_queue(capacity: int, widths: Sequence[int]) -> ShardQueue:
+    """Allocate an empty queue; ``widths[i]`` > 0 adds a payload dim."""
+    fields = tuple(
+        jnp.full((capacity, w) if w > 0 else (capacity,), EMPTY, jnp.int32)
+        for w in widths
+    )
+    return ShardQueue(fields, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+
+
+def queue_push(
+    q: ShardQueue, entries: Tuple[jax.Array, ...], valid: jax.Array
+) -> ShardQueue:
+    """Append ``valid`` entries (batch ``(N, ...)`` per field) at the tail.
+
+    One stable sort front-packs the valid entries in batch order; placement
+    is gathers only.  Entries past ``cap`` are dropped and counted.
+    """
+    cap = q.capacity
+    n = valid.shape[0]
+    order = jnp.argsort(jnp.where(valid, 0, 1))  # valid first, batch order
+    nvalid = jnp.sum(valid.astype(jnp.int32))
+    j = jnp.arange(cap, dtype=jnp.int32) - q.count  # incoming rank per slot
+    fill = (j >= 0) & (j < nvalid)
+    src = order[jnp.clip(j, 0, max(n - 1, 0))]
+    new_fields = tuple(
+        jnp.where(
+            fill.reshape((cap,) + (1,) * (f.ndim - 1)), e[src], f
+        )
+        for f, e in zip(q.fields, entries)
+    )
+    new_count = jnp.minimum(q.count + nvalid, cap)
+    dropped = q.dropped + nvalid - (new_count - q.count)
+    return ShardQueue(new_fields, new_count, dropped)
+
+
+def queue_pop(q: ShardQueue, n: int, limit: jax.Array | None = None):
+    """Pop up to ``n`` entries off the (front-packed) queue head.
+
+    Returns ``(entries, taken, q')`` with static ``(n, ...)`` entry shapes
+    padded by ``-1``; ``limit`` (dynamic) caps the take without changing
+    shapes.  Because the queue is always front-packed, the take is a plain
+    prefix and the survivors a masked roll — no compaction sort needed.
+    """
+    cap = q.capacity
+    if n > cap:
+        raise ValueError(f"pop width {n} exceeds queue capacity {cap}")
+    take = jnp.minimum(q.count, n)
+    if limit is not None:
+        take = jnp.minimum(take, jnp.maximum(limit, 0))
+    out_mask = jnp.arange(n, dtype=jnp.int32) < take
+    keep = q.count - take
+    keep_mask = jnp.arange(cap, dtype=jnp.int32) < keep
+    entries = tuple(_masked(out_mask, f[:n]) for f in q.fields)
+    new_fields = tuple(
+        _masked(keep_mask, jnp.roll(f, -take, axis=0)) for f in q.fields
+    )
+    return entries, take, ShardQueue(new_fields, keep, q.dropped)
+
+
+def route_by_owner(
+    entries: Tuple[jax.Array, ...],
+    dest: jax.Array,
+    valid: jax.Array,
+    num_dest: int,
+    slots: int,
+):
+    """Compact a batch of entries into per-destination send buffers.
+
+    ``entries``: ``(N, ...)`` field arrays; ``dest``: ``(N,)`` destination
+    shard of each entry; ``valid``: live mask.  Returns
+    ``(send, sent, leftover, left_count)``:
+
+    - ``send``: per-field ``(num_dest, slots, ...)`` buffers, row ``p``
+      front-packed with the first ``slots`` entries addressed to shard
+      ``p`` (batch order — older deferred entries keep priority when the
+      caller concatenates them first);
+    - ``sent``: ``(num_dest,)`` realized counts;
+    - ``leftover``: per-field ``(N, ...)`` front-packed batch of the valid
+      entries that did NOT fit their destination's slots this round —
+      deferred, not dropped;
+    - ``left_count``: ``()`` number of leftover entries.
+
+    Built on :func:`repro.core.frontier.owner_compaction` — one stable sort
+    groups entries per destination, cumsums assign within-group ranks, and
+    every placement is a gather.
+    """
+    n = valid.shape[0]
+    order, adds, offset = owner_compaction(dest, valid, num_dest)
+    sent = jnp.minimum(adds, slots)
+    j = jnp.arange(slots, dtype=jnp.int32)
+    fill = j[None, :] < sent[:, None]  # (num_dest, slots)
+    src = order[jnp.clip(offset[:, None] + j[None, :], 0, max(n - 1, 0))]
+    send = tuple(_masked(fill, f[src]) for f in entries)
+
+    # within-destination rank of each entry: its sorted position minus its
+    # group's start — entries ranked past `slots` defer to the next round
+    inv = jnp.argsort(order)  # original index -> sorted position
+    rank = inv - offset[jnp.clip(dest, 0, num_dest - 1)]
+    overflow = valid & (rank >= slots)
+    left_count = jnp.sum(overflow.astype(jnp.int32))
+    order2 = jnp.argsort(jnp.where(overflow, 0, 1))  # overflow first
+    left_mask = jnp.arange(n, dtype=jnp.int32) < left_count
+    leftover = tuple(_masked(left_mask, f[order2]) for f in entries)
+    return send, sent, leftover, left_count
+
+
+def all_to_all_fields(
+    send: Tuple[jax.Array, ...], axis: str
+) -> Tuple[jax.Array, ...]:
+    """Exchange ``(D, slots, ...)`` send buffers over mesh axis ``axis``.
+
+    Must run inside ``shard_map`` (it is the drain's one collective).  Row
+    ``p`` of each returned buffer is the batch device ``p`` addressed to
+    the calling device.
+    """
+    return tuple(
+        jax.lax.all_to_all(f, axis, split_axis=0, concat_axis=0, tiled=True)
+        for f in send
+    )

@@ -1,0 +1,646 @@
+"""Owner-routed sharded random walk over a device mesh (paper §V-D, scaled).
+
+Each device of the mesh holds ONE contiguous vertex-range partition as a
+compact local-id CSR (HBM ∝ 1/D, ``graph.partition.DevicePartition``) and a
+device-resident frontier queue of the walkers currently AT its vertices
+(``shard.exchange.ShardQueue``).  A drain round:
+
+1. pops the local queue (every popped walker's vertex is locally owned, so
+   its full neighbor row is resident),
+2. takes one walk step through the SAME degree-bucketed selection dispatch
+   the single-device engines use (``core.backend``; flat- and window-bias
+   transition programs, both backends),
+3. routes survivors to the shard owning their new vertex: per-destination
+   cumsum compaction into fixed ``(D, slots)`` buffers, ONE tiled
+   ``all_to_all``, per-destination overflow *deferred* to the next round
+   (never dropped),
+4. pushes received walkers into the local queue; a ``psum`` of live counts
+   decides termination.
+
+The whole drain is one ``lax.scan`` inside one ``shard_map`` inside one
+``jit`` per (shard shape, spec, backend) — meshes of the same shape reuse
+the trace; a host loop re-invokes the compiled block only while walkers
+remain (deferred-overflow slack).
+
+**Bit-identical parity.**  ``sharded_random_walk`` reproduces single-device
+``engine.random_walk`` exactly, bit for bit, on both backends, because every
+source of divergence is pinned (DESIGN.md §12):
+
+- *RNG*: the engine draws each step's uniforms as position-indexed ``(W,)``
+  vectors under ``fold_in(key, depth)`` chains.  The sharded drain derives
+  the SAME counted stream per entry — keyed by the walker's own (depth,
+  instance), not by its slot on whatever device it landed on — via
+  ``draw(key_of(depth))[instance]``.
+- *Selection arithmetic*: the pick kernels cumsum block-aligned CSR windows
+  whose float association is fixed by within-window position, so partitions
+  are materialized with ``edge_align = max(buckets)`` lead padding —
+  every row keeps its global ``start % seg`` offset and the partition-local
+  cumsum reproduces the full-graph bits.
+- *Flat biases*: evaluated ONCE on the full graph at partition time and
+  sliced per shard (a neighbor-degree bias needs non-resident degrees, which
+  a shard cannot see), so per-edge bias bits match by construction.
+- *Prev-dependent window biases* (node2vec): the previous vertex's neighbor
+  row is CARRIED with the walker through the exchange (gathered at the
+  source shard, which owns it), so ``is_prev_neighbor`` is exact without
+  any replicated adjacency.
+
+Programs outside the supported envelope — opaque biases, window biases that
+read non-resident neighbor degrees (``needs_deg_u``), MH-accept / opaque
+epilogues — fall back to :func:`replicated_psum_walk`: edges sharded 1/D,
+walker state replicated, owner-computed successors ``psum``-merged (the
+pre-exchange design; correct, collective-heavy, not parity-exact).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.api import EdgeCtx, SamplingSpec
+from repro.core import backend as bk
+from repro.core import select as sel
+from repro.core import transition as tp
+from repro.core.engine import WalkResult, _degree, _edge_ctx
+from repro.distributed.sharding import shard_map_compat
+from repro.graph.csr import CSRGraph
+from repro.graph.partition import (
+    DevicePartition,
+    PartitionMap,
+    partition_by_vertex_range,
+    pid_of_device,
+)
+from repro.shard import exchange as ex
+
+#: safety valve on the host drain loop (each block makes guaranteed progress
+#: as long as exchange_slots >= 1, so this is never hit by a sane config)
+_MAX_BLOCKS = 4096
+
+
+def _per_entry(base_key, d, inst, valid, draw):
+    """Per-entry counted RNG: ``draw(fold_in(base_key, d_e))[inst_e]``.
+
+    ``draw(key) -> (W,)`` must reproduce one of the engine's per-step
+    position-indexed vectors; indexing it at the walker's instance id makes
+    the draw placement-independent.  The common case — every live entry in
+    the batch at the same depth (no deferral backlog) — computes ONE ``(W,)``
+    vector and gathers; mixed-depth batches pay a vmapped per-entry draw.
+    """
+    i = jnp.maximum(inst, 0)
+    d0 = d[0]
+    same = jnp.all(~valid | (d == d0))
+
+    def cheap(_):
+        return draw(jax.random.fold_in(base_key, d0))[i]
+
+    def general(_):
+        return jax.vmap(lambda dd, j: draw(jax.random.fold_in(base_key, dd))[j])(d, i)
+
+    return jax.lax.cond(same, cheap, general, None)
+
+
+def _carried_window_bias(graph, program, v, prev, d, curq, prow):
+    """The window-bias hook closed over carried walker state.
+
+    Mirrors ``engine._window_bias_fn`` except that prev-neighbor membership
+    is an exact compare against the CARRIED ``(B, prow_w)`` neighbor row of
+    ``prev`` (``-2``-padded, gathered at the source shard) instead of a
+    binary search over a resident CSR — identical booleans, no replicated
+    adjacency.  ``needs_deg_u`` hooks are rejected upstream (a shard cannot
+    see non-resident degrees), so ``deg_u`` reads as zeros exactly like the
+    engine's ``needs_deg_u=False`` path.
+    """
+    wb = program.bias
+    deg_v = _degree(graph, curq)
+
+    def bias_of(u, w, mask):
+        ipn = None
+        if wb.needs_prev_neighbors:
+            ipn = (
+                jnp.any(u[..., :, None] == prow[..., None, :], axis=-1)
+                & mask
+                & (prev >= 0)[..., None]
+                & (u >= 0)
+            )
+        ctx = EdgeCtx(
+            v=v, u=u, weight=w, deg_v=deg_v,
+            deg_u=jnp.zeros(u.shape, jnp.int32), prev=prev,
+            is_prev_neighbor=ipn, depth=d[..., None],
+        )
+        return wb.fn(ctx)
+
+    return bias_of
+
+
+# ---------------------------------------------------------------------------
+# The compiled drain block (one jit per config; cached)
+# ---------------------------------------------------------------------------
+
+_DRAIN_CACHE: dict = {}
+#: bound on cached drain traces — like every jit-static-spec entry point in
+#: this repo (engine.random_walk, oom._drain), a FRESHLY CONSTRUCTED spec is
+#: a new trace key (its hooks are new closures), so callers should reuse
+#: spec objects across calls; the bound turns a caller that doesn't into
+#: steady-state recompiles instead of an unbounded cache leak
+_DRAIN_CACHE_MAX = 64
+
+
+def _drain_block(
+    mesh: Mesh, axis: str, *, spec: SamplingSpec, be: str, num_devices: int,
+    num_inst: int, depth: int, cap: int, slots: int, prow_w: int,
+    buckets: tuple, use_chunked: bool, rounds: int, range_size: int,
+):
+    """Build (or fetch) the jitted shard_map drain for one static config."""
+    cfg = (mesh, axis, spec, be, num_devices, num_inst, depth, cap, slots,
+           prow_w, buckets, use_chunked, rounds, range_size)
+    if cfg in _DRAIN_CACHE:
+        return _DRAIN_CACHE[cfg]
+    while len(_DRAIN_CACHE) >= _DRAIN_CACHE_MAX:
+        _DRAIN_CACHE.pop(next(iter(_DRAIN_CACHE)))
+
+    program = tp.lower(spec)
+    mode = program.mode
+    needs_prev = prow_w > 0
+    nfields = 5 if needs_prev else 4
+    num_dest = num_devices
+
+    def body(indptr, iloc, iglob, wts, bias, vlo,
+             qfields, qcount, qdropped, dfields, dcount,
+             walks, key, seeds, limits):
+        indptr, iloc, iglob, wts, bias, vlo0 = (
+            indptr[0], iloc[0], iglob[0], wts[0], bias[0], vlo[0]
+        )
+        qfields = tuple(f[0] for f in qfields)
+        dfields = tuple(f[0] for f in dfields)
+        qcount, qdropped, dcount = qcount[0], qdropped[0], dcount[0]
+        local = CSRGraph(indptr=indptr, indices=iloc, weights=wts)
+        nloc = indptr.shape[0] - 2
+        dev = DevicePartition(
+            graph=local, indices_global=iglob,
+            vertex_lo=vlo0, vertex_hi=vlo0 + nloc,
+        )
+        padded = bk.pad_walk_csr(iglob, bias, buckets)
+
+        def do_round(carry):
+            q, defer, walks = carry
+            # throttle the pop so (deferred + newly stepped) fits one batch
+            entries, taken, q = ex.queue_pop(q, cap, limit=cap - defer.count)
+            v, inst, d = entries[0], entries[1], entries[2]
+            prev = entries[3]
+            prow = entries[4] if needs_prev else None
+            valid = inst >= 0
+            curq = jnp.where(valid, dev.localize(v), -1)
+
+            # -- one walk step, on the engine's exact counted RNG stream ----
+            def u_draw(kd):  # fold_in(kstep, 1) -> fold_in(·, 0): bucket pick
+                return jax.random.uniform(
+                    jax.random.fold_in(jax.random.fold_in(kd, 1), 0),
+                    (num_inst,), dtype=jnp.float32)
+
+            def tail_draw(kd):  # fold_in(kstep, 1) -> fold_in(·, 1): tail
+                return jax.random.uniform(
+                    jax.random.fold_in(jax.random.fold_in(kd, 1), 1),
+                    (num_inst,), dtype=jnp.float32)
+
+            r0 = _per_entry(key, d, inst, valid, u_draw)
+            tail = _per_entry(key, d, inst, valid, tail_draw) if use_chunked else None
+            if mode == "flat":
+                if be == "pallas":
+                    u = bk.walk_step_bucketed(
+                        key, indptr, iglob, bias, padded, curq,
+                        buckets=buckets, use_chunked=use_chunked,
+                        rand=r0, tail_rand=tail,
+                    )
+                else:
+                    u = bk.walk_step_flat_reference(
+                        key, indptr, iglob, bias, padded, curq,
+                        buckets=buckets, use_chunked=use_chunked,
+                        max_degree=None, rand=r0, tail_rand=tail,
+                    )
+            else:
+                bias_of = _carried_window_bias(local, program, v, prev, d, curq, prow)
+                u = bk.walk_step_bucketed_window(
+                    key, indptr, iglob, wts, padded, curq, bias_of,
+                    buckets=buckets, use_chunked=use_chunked, backend=be,
+                    rand=r0, tail_rand=tail,
+                )
+
+            # -- epilogue (engine's fused post-select step, instance-keyed) --
+            epi = program.epilogue
+            if isinstance(epi, tp.TeleportEpilogue):
+                def tel_draw(kd):
+                    kj, _ = jax.random.split(jax.random.fold_in(kd, 2))
+                    return jax.random.uniform(kj, (num_inst,))
+
+                teleport = _per_entry(key, d, inst, valid, tel_draw) < epi.prob
+                if epi.target == "uniform":
+                    def tgt_draw(kd):
+                        _, kv = jax.random.split(jax.random.fold_in(kd, 2))
+                        return jax.random.randint(
+                            kv, (num_inst,), 0, epi.num_vertices)
+
+                    tgt = _per_entry(key, d, inst, valid, tgt_draw)
+                elif epi.target == "fixed":
+                    tgt = jnp.full_like(u, epi.vertex)
+                else:  # "home"
+                    tgt = seeds[jnp.maximum(inst, 0)].astype(jnp.int32)
+                nxt = jnp.where(teleport & (u >= 0), tgt, u)
+            else:  # IdentityEpilogue (MH/opaque rejected upstream)
+                nxt = u
+            nxt = jnp.where(u >= 0, nxt, -1)
+
+            ok = valid & (nxt >= 0)
+            walks = walks.at[
+                jnp.where(ok, inst, num_inst), jnp.maximum(d, 0) + 1
+            ].set(nxt, mode="drop")
+            cont = ok & (d + 1 < limits[jnp.maximum(inst, 0)])
+
+            # -- route survivors to their new owner ------------------------
+            new_entry = [nxt, inst, d + 1, v]
+            if needs_prev:
+                # the NEXT step's is_prev_neighbor needs N(v): gather v's
+                # row here, the one shard that owns it, and carry it along
+                offs = jnp.arange(prow_w, dtype=jnp.int32)
+                st = indptr[jnp.maximum(curq, 0)]
+                dgv = _degree(local, curq)
+                rmask = (offs[None, :] < dgv[:, None]) & valid[:, None]
+                new_entry.append(
+                    jnp.where(rmask, iglob[jnp.where(rmask, st[:, None] + offs, 0)], -2)
+                )
+            dmask = jnp.arange(cap, dtype=jnp.int32) < defer.count
+            cand = tuple(
+                jnp.concatenate([df, ne], axis=0)
+                for df, ne in zip(defer.fields, new_entry)
+            )
+            cand_valid = jnp.concatenate([dmask, cont])
+            dest = pid_of_device(cand[0], range_size, num_dest)
+            send, _sent, leftover, left_count = ex.route_by_owner(
+                cand, dest, cand_valid, num_dest, slots
+            )
+            recv = ex.all_to_all_fields(send, axis)
+            rflat = tuple(r.reshape((num_dest * slots,) + r.shape[2:]) for r in recv)
+            q = ex.queue_push(q, rflat, rflat[1] >= 0)
+            defer = ex.ShardQueue(
+                tuple(f[:cap] for f in leftover), left_count, defer.dropped
+            )
+            return q, defer, walks
+
+        def round_step(carry, _):
+            q, defer, walks = carry
+            live = jax.lax.psum(q.count + defer.count, axis)
+            carry = jax.lax.cond(
+                live > 0, do_round, lambda c: c, (q, defer, walks)
+            )
+            return carry, None
+
+        q0 = ex.ShardQueue(qfields, qcount, qdropped)
+        d0 = ex.ShardQueue(dfields, dcount, jnp.zeros((), jnp.int32))
+        (q, defer, walks), _ = jax.lax.scan(
+            round_step, (q0, d0, walks), None, length=rounds
+        )
+        live = jax.lax.psum(q.count + defer.count, axis)
+        walks = jax.lax.pmax(walks, axis)
+        return (
+            tuple(f[None] for f in q.fields), q.count[None], q.dropped[None],
+            tuple(f[None] for f in defer.fields), defer.count[None],
+            walks, live,
+        )
+
+    dshard = P(axis)
+    rep = P()
+    in_specs = (
+        dshard, dshard, dshard, dshard, dshard, dshard,  # graph arrays
+        (dshard,) * nfields, dshard, dshard,             # queue
+        (dshard,) * nfields, dshard,                     # deferred
+        rep, rep, rep, rep,                              # walks, key, seeds, limits
+    )
+    out_specs = (
+        (dshard,) * nfields, dshard, dshard,
+        (dshard,) * nfields, dshard,
+        rep, rep,
+    )
+    fn = jax.jit(
+        shard_map_compat(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    )
+    _DRAIN_CACHE[cfg] = fn
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def sharded_random_walk(
+    mesh: Mesh,
+    graph: CSRGraph,
+    seeds,
+    key: jax.Array,
+    *,
+    depth: int,
+    spec: SamplingSpec,
+    max_degree: int,
+    axis: str = "data",
+    backend: bk.Backend = "auto",
+    depth_limits: Optional[np.ndarray] = None,
+    exchange_slots: Optional[int] = None,
+    queue_capacity: Optional[int] = None,
+    rounds_per_block: Optional[int] = None,
+) -> WalkResult:
+    """Random walk over a range-sharded graph: owners step, emigrants route.
+
+    Each device of ``mesh`` (along ``axis``) holds one vertex-range shard of
+    ``graph`` — per-device CSR footprint ∝ 1/D — and walkers migrate to the
+    shard owning their frontier vertex each step.  For flat- and window-bias
+    transition programs the result is **bit-identical** to single-device
+    ``engine.random_walk(graph, seeds, key, ...)`` with the same arguments,
+    on both backends (the parity contract in the module docstring; for
+    window programs ``max_degree`` must be the true max row degree, the same
+    contract the engine's exact window bucket plan already imposes).
+    Unsupported programs fall back to :func:`replicated_psum_walk`.
+
+    ``depth_limits`` (optional ``(W,)``, values in ``[0, depth]``) stops
+    instance ``i`` after its own number of steps — the batched service packs
+    heterogeneous requests into one launch with it.  ``-1`` seeds are
+    padding and emit all--1 rows.
+
+    ``exchange_slots`` bounds the per-destination send buffer of one round;
+    walkers past it are deferred to later rounds, never dropped (the queue
+    itself defaults to holding the whole walker population, so ``dropped``
+    stays zero).  ``rounds_per_block`` sizes the compiled scan; the host
+    re-invokes the block while any shard still holds live walkers.
+    """
+    program = tp.lower(spec)
+    mode = program.mode
+    epi_ok = isinstance(program.epilogue, (tp.IdentityEpilogue, tp.TeleportEpilogue))
+    bias_ok = mode == "flat" or (mode == "window" and not program.bias.needs_deg_u)
+    seeds_np = np.asarray(seeds, dtype=np.int32)
+    num_inst = int(seeds_np.shape[0])
+    if depth_limits is None:
+        limits_np = np.full((num_inst,), depth, np.int32)
+    else:
+        limits_np = np.asarray(depth_limits, dtype=np.int32)
+        if limits_np.shape != (num_inst,):
+            raise ValueError(
+                f"depth_limits shape {limits_np.shape} != ({num_inst},)"
+            )
+        if limits_np.size and (limits_np.min() < 0 or limits_np.max() > depth):
+            raise ValueError(
+                f"depth_limits must lie in [0, depth={depth}], got "
+                f"[{limits_np.min()}, {limits_np.max()}]"
+            )
+
+    if not (epi_ok and bias_ok):
+        walks = replicated_psum_walk(
+            mesh, graph, jnp.asarray(seeds_np), key,
+            depth=depth, spec=spec, max_degree=max_degree, axis=axis,
+        )
+        walks = jnp.where(
+            jnp.arange(depth + 1)[None, :] <= jnp.asarray(limits_np)[:, None],
+            walks, -1,
+        )
+        lengths = jnp.sum(walks >= 0, axis=-1)
+        return WalkResult(walks, lengths, jnp.sum(jnp.maximum(lengths - 1, 0)))
+
+    if depth < 1 or num_inst == 0:
+        walks = jnp.full((num_inst, depth + 1), -1, jnp.int32)
+        if num_inst:
+            walks = walks.at[:, 0].set(jnp.asarray(seeds_np))
+        lengths = jnp.sum(walks >= 0, axis=-1)
+        return WalkResult(walks, lengths, jnp.sum(jnp.maximum(lengths - 1, 0)))
+
+    num_devices = int(mesh.shape[axis])
+    be = bk.resolve_backend(backend)
+    if mode == "flat":
+        buckets, use_chunked = bk.walk_bucket_plan(max_degree)
+    else:
+        buckets, use_chunked = bk.walk_bucket_plan_window(max_degree)
+    seg_big = max(buckets)
+    pm = PartitionMap.create(graph.num_vertices, num_devices)
+    parts = partition_by_vertex_range(graph, num_devices)
+    needs_prev = mode == "window" and program.bias.needs_prev_neighbors
+    indptr_np = np.asarray(graph.indptr)
+    prow_w = int(np.diff(indptr_np).max()) if needs_prev else 0
+
+    # -- materialize shards: common padded shape, global block alignment ----
+    pad_v = pm.range_size
+    pad_e = max((p.edge_lo % seg_big) + p.num_edges for p in parts)
+    devs = [
+        p.to_local_device_csr(pad_vertices=pad_v, pad_edges=pad_e, edge_align=seg_big)
+        for p in parts
+    ]
+    if mode == "flat":
+        # flat biases may read non-resident state (e.g. neighbor degrees):
+        # evaluate ONCE on the full graph, slice per shard — bit-equal to the
+        # engine's full-graph evaluation by construction
+        fb_full = np.asarray(program.bias.fn(graph), dtype=np.float32)
+        bias_np = np.zeros((num_devices, pad_e), np.float32)
+        for i, p in enumerate(parts):
+            lead = p.edge_lo % seg_big
+            bias_np[i, lead : lead + p.num_edges] = fb_full[
+                p.edge_lo : p.edge_lo + p.num_edges
+            ]
+        bias_s = jnp.asarray(bias_np)
+    else:
+        bias_s = jnp.stack([d.graph.weights for d in devs])
+
+    shardspec = NamedSharding(mesh, P(axis))
+    rep = NamedSharding(mesh, P())
+    put_s = functools.partial(jax.device_put, device=shardspec)
+    indptr_s = put_s(jnp.stack([d.graph.indptr for d in devs]))
+    iloc_s = put_s(jnp.stack([d.graph.indices for d in devs]))
+    iglob_s = put_s(jnp.stack([d.indices_global for d in devs]))
+    wts_s = put_s(jnp.stack([d.graph.weights for d in devs]))
+    bias_s = put_s(bias_s)
+    vlo_s = put_s(jnp.asarray([p.vertex_lo for p in parts], jnp.int32))
+
+    walks0 = np.full((num_inst, depth + 1), -1, np.int32)
+    walks0[:, 0] = seeds_np
+
+    # -- initial queues: every live seed starts at its owner ----------------
+    cap = num_inst if queue_capacity is None else int(queue_capacity)
+    if cap < 1:
+        raise ValueError(f"queue_capacity must be >= 1, got {cap}")
+    slots = cap if exchange_slots is None else int(exchange_slots)
+    if slots < 1:
+        raise ValueError(f"exchange_slots must be >= 1, got {slots}")
+    slots = min(slots, cap)
+    widths = (0, 0, 0, 0) + ((prow_w,) if needs_prev else ())
+    live0 = (seeds_np >= 0) & (limits_np > 0)
+    owners = pm.pid_of(np.maximum(seeds_np, 0))
+    qf0 = [
+        np.full((num_devices, cap) if w == 0 else (num_devices, cap, w),
+                -1 if w == 0 else -2, np.int32)
+        for w in widths
+    ]
+    qc0 = np.zeros((num_devices,), np.int32)
+    for dv in range(num_devices):
+        idxs = np.nonzero(live0 & (owners == dv))[0].astype(np.int32)
+        k = len(idxs)
+        if k > cap:
+            raise ValueError(
+                f"queue_capacity={cap} cannot hold the {k} seeds owned by "
+                f"shard {dv}; raise queue_capacity (default: num instances)"
+            )
+        qf0[0][dv, :k] = seeds_np[idxs]
+        qf0[1][dv, :k] = idxs
+        qf0[2][dv, :k] = 0
+        qf0[3][dv, :k] = -1
+        qc0[dv] = k
+
+    qfields = tuple(put_s(jnp.asarray(f)) for f in qf0)
+    qcount = put_s(jnp.asarray(qc0))
+    qdropped = put_s(jnp.zeros((num_devices,), jnp.int32))
+    dfields = tuple(
+        put_s(jnp.full((num_devices, cap) if w == 0 else (num_devices, cap, w),
+                       -1 if w == 0 else -2, jnp.int32))
+        for w in widths
+    )
+    dcount = put_s(jnp.zeros((num_devices,), jnp.int32))
+    walks = jax.device_put(jnp.asarray(walks0), rep)
+    seeds_d = jax.device_put(jnp.asarray(seeds_np), rep)
+    limits_d = jax.device_put(jnp.asarray(limits_np), rep)
+    key = jax.device_put(key, rep)
+
+    rounds = int(rounds_per_block) if rounds_per_block else depth + 1
+    drain = _drain_block(
+        mesh, axis, spec=spec, be=be, num_devices=num_devices,
+        num_inst=num_inst, depth=depth, cap=cap, slots=slots, prow_w=prow_w,
+        buckets=buckets, use_chunked=use_chunked, rounds=max(rounds, 1),
+        range_size=pm.range_size,
+    )
+
+    blocks = 0
+    while True:
+        qfields, qcount, qdropped, dfields, dcount, walks, live = drain(
+            indptr_s, iloc_s, iglob_s, wts_s, bias_s, vlo_s,
+            qfields, qcount, qdropped, dfields, dcount,
+            walks, key, seeds_d, limits_d,
+        )
+        blocks += 1
+        if int(jax.device_get(live)) == 0:
+            break
+        if blocks >= _MAX_BLOCKS:
+            raise RuntimeError(
+                f"sharded drain made no global progress after {blocks} "
+                f"blocks — exchange_slots={slots} too small?"
+            )
+    dropped = int(np.sum(jax.device_get(qdropped)))
+    if dropped:
+        raise RuntimeError(
+            f"sharded frontier queues dropped {dropped} walkers — "
+            f"queue_capacity={cap} is below the live walker population"
+        )
+    lengths = jnp.sum(walks >= 0, axis=-1)
+    return WalkResult(walks, lengths, jnp.sum(jnp.maximum(lengths - 1, 0)))
+
+
+# ---------------------------------------------------------------------------
+# Replicated-state fallback (the pre-exchange design) + shard staging helper
+# ---------------------------------------------------------------------------
+
+
+def shard_graph_for_mesh(graph: CSRGraph, num_devices: int):
+    """Range-partition a CSR into per-device stacked full-V-indptr CSRs.
+
+    Returns (indptr_stack (D, V+1), indices_stack (D, Emax), weights_stack)
+    where each device's slice covers the full vertex-id space with empty rows
+    for unowned vertices (so global ids index directly) and edge arrays are
+    padded to the max partition size.  Only the :func:`replicated_psum_walk`
+    fallback uses this layout; the owner-routed path ships compact
+    ``DevicePartition`` CSRs instead (O(V/D + E_D), DESIGN.md §12).
+    """
+    parts = partition_by_vertex_range(graph, num_devices)
+    v = graph.num_vertices
+    emax = max(p.num_edges for p in parts)
+    indptrs, indices, weights = [], [], []
+    for p in parts:
+        full = np.zeros(v + 1, np.int32)
+        full[p.vertex_lo + 1 : p.vertex_hi + 1] = p.indptr[1:]
+        full[p.vertex_hi + 1 :] = p.indptr[-1]
+        indptrs.append(full)
+        indices.append(np.pad(p.indices, (0, emax - p.num_edges), constant_values=0).astype(np.int32))
+        weights.append(np.pad(p.weights, (0, emax - p.num_edges)).astype(np.float32))
+    return (
+        jnp.asarray(np.stack(indptrs)),
+        jnp.asarray(np.stack(indices)),
+        jnp.asarray(np.stack(weights)),
+    )
+
+
+def replicated_psum_walk(
+    mesh: Mesh,
+    graph: CSRGraph,
+    seeds: jax.Array,
+    key: jax.Array,
+    *,
+    depth: int,
+    spec: SamplingSpec,
+    max_degree: int,
+    axis: str = "data",
+) -> jax.Array:
+    """Walk over a device-sharded graph: owners advance, ``psum`` merges.
+
+    Returns walks (I, depth+1).  Per step each device computes successors for
+    walkers whose current vertex it owns (others contribute zeros) and a
+    single integer psum replicates the advanced state.  The general-program
+    fallback of :func:`sharded_random_walk`: it runs ANY spec (the dense
+    gather evaluates opaque hooks; every device sees all walker state, so
+    MH-accept can read local degrees for its own vertices), at the cost of
+    replicated walker state and one psum per step, and it draws its own RNG
+    pattern (not parity-exact with the single-device engine).
+    """
+    ndev = mesh.shape[axis]
+    nvert = graph.num_vertices
+    program = tp.lower(spec)
+    indptr_s, indices_s, weights_s = shard_graph_for_mesh(graph, ndev)
+    # same cached bounds the partitioner used — lo/hi must match the shards
+    bounds = PartitionMap.create(nvert, ndev).bounds.astype(np.int32)
+    lo = jnp.asarray(bounds[:-1])
+    hi = jnp.asarray(bounds[1:])
+
+    @functools.partial(
+        shard_map_compat,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(), P()),
+        out_specs=P(),
+    )
+    def _run(indptr, indices, wts, lo, hi, seeds, key):
+        local = CSRGraph(indptr[0], indices[0], wts[0])
+        lo0, hi0 = lo[0], hi[0]
+        home = seeds.astype(jnp.int32) if program.carries_home else None
+
+        def step(carry, it):
+            cur, prev = carry
+            own = (cur >= lo0) & (cur < hi0)
+            safe = jnp.where(own, cur, lo0)  # in-range dummy for gathers
+            ctx, mask = _edge_ctx(local, safe, prev, it, max_degree, spec.needs_prev_neighbors)
+            biases = jnp.where(mask, spec.edge_bias(ctx), 0.0)
+            kstep = jax.random.fold_in(key, it)  # same key on all devices
+            idx = sel.select_with_replacement(jax.random.fold_in(kstep, 1), biases, mask, 1)[..., 0]
+            u = jnp.take_along_axis(ctx.u, idx[..., None], axis=-1)[..., 0]
+            alive = own & (cur >= 0) & jnp.any(mask, axis=-1)
+            # post-select update through the lowered epilogue (shared with
+            # the in-memory engines and the OOM drain, DESIGN.md §10)
+            u = jnp.where(
+                alive,
+                tp.apply_epilogue(
+                    jax.random.fold_in(kstep, 2), program, spec, ctx, u, home
+                ),
+                -1,
+            )
+            contrib = jnp.where(own, jnp.where(alive, u, -1), 0)
+            dead = jax.lax.psum(jnp.where(own, jnp.where(alive, 0, 1), 0), axis)
+            nxt = jax.lax.psum(contrib, axis)  # exactly one owner contributes
+            nxt = jnp.where((dead > 0) | (cur < 0), -1, nxt)
+            return (nxt, cur), nxt
+
+        (_, _), path = jax.lax.scan(
+            step, (seeds.astype(jnp.int32), jnp.full(seeds.shape, -1, jnp.int32)), jnp.arange(depth)
+        )
+        return jnp.concatenate([seeds[None].astype(jnp.int32), path], 0).T
+
+    return _run(indptr_s, indices_s, weights_s, lo, hi, seeds, key)

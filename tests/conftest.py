@@ -1,0 +1,26 @@
+"""Shared test helpers.
+
+Multi-device suites (``test_multidevice.py``, ``test_shard.py``) run each
+case in a subprocess so the main test process keeps its single-device view
+(the dry-run isolation rule): the child sets
+``--xla_force_host_platform_device_count=8`` before importing jax, asserts
+inside, and prints one JSON line the parent parses.
+"""
+import json
+import subprocess
+import sys
+
+MULTIDEVICE_HEADER = """
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+"""
+
+
+def run_multidevice_child(code: str, timeout: int = 420) -> dict:
+    """Run ``code`` in a fresh interpreter; return its last stdout line as JSON."""
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=timeout
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])

@@ -4,25 +4,9 @@ The main test process must keep its single-device view (dry-run isolation
 rule), so each case boots a small JAX instance with
 ``--xla_force_host_platform_device_count=N`` and asserts inside.
 """
-import json
-import subprocess
-import sys
-
 import pytest
 
-def run_child(code: str, timeout: int = 420) -> dict:
-    out = subprocess.run(
-        [sys.executable, "-c", code], capture_output=True, text=True, timeout=timeout
-    )
-    assert out.returncode == 0, out.stderr[-3000:]
-    return json.loads(out.stdout.strip().splitlines()[-1])
-
-
-HEADER = """
-import os, json
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp, numpy as np
-"""
+from conftest import MULTIDEVICE_HEADER as HEADER, run_multidevice_child as run_child
 
 
 @pytest.mark.slow

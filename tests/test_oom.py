@@ -353,3 +353,30 @@ class TestNonFlatSpecsOOM:
         w_ref, _ = self._run(setup, spec, backend="reference", depth=4)
         w_pal, _ = self._run(setup, spec, backend="pallas", depth=4)
         np.testing.assert_array_equal(w_ref, w_pal)
+
+
+class TestStrictOverflow:
+    """Queue-capacity overflow must surface, never silently lose walkers."""
+
+    def _run(self, setup, **kw):
+        g, parts, seeds = setup
+        return oom_random_walk(
+            parts, g.num_vertices, seeds, jax.random.PRNGKey(0),
+            depth=6, spec=alg.deepwalk(), max_degree=g.max_degree(),
+            chunk=32, **kw,
+        )
+
+    def test_default_capacity_never_drops(self, setup):
+        _, stats = self._run(setup, strict=True)  # strict must not trip
+        assert stats.frontier_dropped == 0
+
+    def test_tiny_capacity_counts_drops_in_stats(self, setup):
+        # 96 instances funneled into 4 queues of 8 slots: guaranteed overflow
+        walks, stats = self._run(setup, queue_capacity=8)
+        assert stats.frontier_dropped > 0
+        # dropped walkers freeze (short rows) instead of corrupting others
+        assert (walks[:, 0] >= 0).all()
+
+    def test_strict_mode_raises_with_clear_error(self, setup):
+        with pytest.raises(RuntimeError, match="dropped .* capacity overflow"):
+            self._run(setup, queue_capacity=8, strict=True)

@@ -1,0 +1,324 @@
+"""Owner-routed sharded sampling (repro.shard, DESIGN.md §12).
+
+Two layers:
+
+- In-process tests of the exchange machinery (queue push/pop, per-
+  destination routing with overflow deferral, per-device footprint) — pure
+  fixed-shape array programs, no mesh required.
+- Subprocess tests on a forced 8-host-device mesh (same harness as
+  ``test_multidevice.py``): the bit-identical parity contract of
+  ``sharded_random_walk`` vs single-device ``random_walk`` for flat- and
+  window-bias programs on both backends, overflow round-trips, the
+  ``placement="sharded"`` service target, and the instance-parallel
+  key-disjointness fix.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import MULTIDEVICE_HEADER as HEADER, run_multidevice_child as run_child
+from repro.shard import exchange as ex
+
+
+# ---------------------------------------------------------------------------
+# Exchange machinery (in-process, no mesh)
+# ---------------------------------------------------------------------------
+
+
+class TestExchange:
+    def test_queue_push_pop_roundtrip_with_payload(self):
+        q = ex.make_queue(8, (0, 0, 2))
+        ent = (
+            jnp.array([5, -1, 7, 9], jnp.int32),
+            jnp.array([0, -1, 1, 2], jnp.int32),
+            jnp.array([[10, 11], [0, 0], [12, 13], [14, 15]], jnp.int32),
+        )
+        valid = jnp.array([True, False, True, True])
+        q = ex.queue_push(q, ent, valid)
+        assert int(q.count) == 3 and int(q.dropped) == 0
+        # valid entries keep batch order, front-packed
+        np.testing.assert_array_equal(np.asarray(q.fields[0][:3]), [5, 7, 9])
+        np.testing.assert_array_equal(np.asarray(q.fields[2][0]), [10, 11])
+
+        out, taken, q = ex.queue_pop(q, 2)
+        assert int(taken) == 2
+        np.testing.assert_array_equal(np.asarray(out[0]), [5, 7])
+        np.testing.assert_array_equal(np.asarray(out[2]), [[10, 11], [12, 13]])
+        # survivor re-compacted to the front
+        assert int(q.count) == 1 and int(q.fields[0][0]) == 9
+        assert int(q.fields[1][1]) == -1  # vacated slot cleared
+
+    def test_queue_pop_limit_caps_take(self):
+        q = ex.make_queue(4, (0, 0))
+        q = ex.queue_push(
+            q,
+            (jnp.arange(4, dtype=jnp.int32), jnp.arange(4, dtype=jnp.int32)),
+            jnp.ones(4, bool),
+        )
+        out, taken, q = ex.queue_pop(q, 4, limit=jnp.int32(1))
+        assert int(taken) == 1 and int(q.count) == 3
+        np.testing.assert_array_equal(np.asarray(out[0]), [0, -1, -1, -1])
+
+    def test_queue_push_overflow_counted(self):
+        q = ex.make_queue(2, (0, 0))
+        ent = (jnp.arange(4, dtype=jnp.int32), jnp.arange(4, dtype=jnp.int32))
+        q = ex.queue_push(q, ent, jnp.ones(4, bool))
+        assert int(q.count) == 2 and int(q.dropped) == 2
+
+    def test_route_by_owner_buckets_and_defers(self):
+        # 6 valid entries: dests [0, 1, 1, 1, 0, 1]; slots=2 per destination
+        vert = jnp.array([0, 10, 11, 12, 1, 13, -1, -1], jnp.int32)
+        inst = jnp.array([0, 1, 2, 3, 4, 5, -1, -1], jnp.int32)
+        dest = jnp.array([0, 1, 1, 1, 0, 1, 0, 0], jnp.int32)
+        valid = inst >= 0
+        send, sent, leftover, left = ex.route_by_owner(
+            (vert, inst), dest, valid, num_dest=2, slots=2
+        )
+        np.testing.assert_array_equal(np.asarray(sent), [2, 2])
+        # batch order within destination: older entries win the slots
+        np.testing.assert_array_equal(np.asarray(send[0][0]), [0, 1])
+        np.testing.assert_array_equal(np.asarray(send[0][1]), [10, 11])
+        # the two overflowing dest-1 entries defer, front-packed, in order
+        assert int(left) == 2
+        np.testing.assert_array_equal(np.asarray(leftover[0][:2]), [12, 13])
+        assert int(leftover[1][2]) == -1
+
+    def test_route_then_push_conserves_entries(self):
+        """Capacity round-trip: routed + deferred + queued == offered."""
+        rng = np.random.default_rng(0)
+        n, d, slots = 64, 4, 5
+        vert = jnp.asarray(rng.integers(0, 40, n).astype(np.int32))
+        inst = jnp.asarray(np.arange(n, dtype=np.int32))
+        dest = (vert // 10).astype(jnp.int32)
+        valid = jnp.asarray(rng.random(n) < 0.8)
+        send, sent, leftover, left = ex.route_by_owner(
+            (vert, inst), dest, valid, num_dest=d, slots=slots
+        )
+        assert int(sent.sum() + left) == int(valid.sum())
+        assert int(sent.max()) <= slots
+        # every sent + deferred instance id appears exactly once
+        ids = np.concatenate(
+            [np.asarray(send[1]).ravel(), np.asarray(leftover[1])]
+        )
+        ids = ids[ids >= 0]
+        expect = np.asarray(inst)[np.asarray(valid)]
+        np.testing.assert_array_equal(np.sort(ids), np.sort(expect))
+
+
+# ---------------------------------------------------------------------------
+# Per-device footprint (host-side property of the shard layout)
+# ---------------------------------------------------------------------------
+
+
+def test_per_device_csr_footprint_scales_inverse_with_devices():
+    """Each shard ships O(V/D + E_D) arrays — never the O(V) indptr of the
+    replicated-psum layout — and per-device edge storage shrinks with D."""
+    from repro.graph import powerlaw_graph
+    from repro.graph.partition import PartitionMap, partition_by_vertex_range
+
+    g = powerlaw_graph(4096, seed=7, weighted=True)
+    e_total = g.num_edges
+    prev_pad_e = None
+    for ndev in (2, 4, 8):
+        pm = PartitionMap.create(g.num_vertices, ndev)
+        parts = partition_by_vertex_range(g, ndev)
+        align = 512
+        pad_e = max((p.edge_lo % align) + p.num_edges for p in parts)
+        dev = parts[0].to_local_device_csr(
+            pad_vertices=pm.range_size, pad_edges=pad_e, edge_align=align
+        )
+        # indptr rows ∝ V/D (+2: phantom sink + fence), not V+1
+        assert dev.graph.indptr.shape[0] == pm.range_size + 2
+        # per-device edge arrays well under the full graph, shrinking with D
+        assert pad_e <= 3 * e_total // ndev + align
+        if prev_pad_e is not None:
+            assert pad_e < prev_pad_e
+        prev_pad_e = pad_e
+
+
+def test_edge_alignment_preserves_global_block_offsets():
+    from repro.graph import powerlaw_graph
+    from repro.graph.partition import partition_by_vertex_range
+
+    g = powerlaw_graph(1024, seed=3, weighted=True)
+    parts = partition_by_vertex_range(g, 4)
+    indptr = np.asarray(g.indptr)
+    for p in parts:
+        dev = p.to_local_device_csr(edge_align=512)
+        local = np.asarray(dev.graph.indptr)
+        for v in range(p.vertex_lo, min(p.vertex_hi, p.vertex_lo + 50)):
+            assert local[v - p.vertex_lo] % 512 == indptr[v] % 512
+
+
+# ---------------------------------------------------------------------------
+# Mesh execution (subprocess, forced 8 host devices)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_sharded_walk_bit_identical_reference_backend():
+    """Flat AND window programs, 4- and 8-way meshes, reference backend:
+    sharded == single-device bit for bit, including with tiny exchange
+    buffers (overflow deferred across rounds, never dropped)."""
+    d = run_child(HEADER + """
+from repro.graph import powerlaw_graph
+from repro.core import algorithms as alg
+from repro.core.engine import random_walk
+from repro.shard import sharded_random_walk
+g = powerlaw_graph(1500, exponent=1.9, seed=5, weighted=True)
+md = g.max_degree()
+seeds = jax.random.randint(jax.random.PRNGKey(0), (96,), 0, g.num_vertices)
+key = jax.random.PRNGKey(11)
+out = {}
+for D in (4, 8):
+    mesh = jax.make_mesh((D,), ("data",))
+    for spec, kw in [
+        (alg.deepwalk(), {}),
+        (alg.weighted_random_walk(), {}),
+        (alg.biased_random_walk(), {}),          # neighbor-degree flat bias
+        (alg.node2vec(), {}),                    # prev-carried window bias
+        (alg.random_walk_with_restart(0.25), {}),  # teleport-home epilogue
+        (alg.deepwalk(), dict(exchange_slots=3)),  # forced overflow deferral
+        (alg.node2vec(), dict(exchange_slots=4)),
+    ]:
+        ref = random_walk(g, seeds, key, depth=10, spec=spec,
+                          max_degree=md, backend="reference")
+        res = sharded_random_walk(mesh, g, seeds, key, depth=10, spec=spec,
+                                  max_degree=md, backend="reference", **kw)
+        tag = f"{D}/{spec.name}/{'slots' if kw else 'full'}"
+        out[tag] = bool(jnp.array_equal(ref.walks, res.walks)) and bool(
+            jnp.array_equal(ref.lengths, res.lengths))
+print(json.dumps(out))
+""")
+    assert all(d.values()), {k: v for k, v in d.items() if not v}
+
+
+@pytest.mark.slow
+def test_sharded_walk_bit_identical_pallas_backend():
+    """Interpret-mode Pallas under shard_map: same bits as the single-device
+    pallas path for a flat and a window program."""
+    d = run_child(HEADER + """
+from repro.graph import powerlaw_graph
+from repro.core import algorithms as alg
+from repro.core.engine import random_walk
+from repro.shard import sharded_random_walk
+g = powerlaw_graph(300, seed=3, weighted=True)
+md = g.max_degree()
+seeds = jax.random.randint(jax.random.PRNGKey(0), (24,), 0, g.num_vertices)
+key = jax.random.PRNGKey(7)
+mesh = jax.make_mesh((4,), ("data",))
+out = {}
+for spec in (alg.deepwalk(), alg.node2vec()):
+    ref = random_walk(g, seeds, key, depth=4, spec=spec,
+                      max_degree=md, backend="pallas")
+    res = sharded_random_walk(mesh, g, seeds, key, depth=4, spec=spec,
+                              max_degree=md, backend="pallas")
+    out[spec.name] = bool(jnp.array_equal(ref.walks, res.walks))
+print(json.dumps(out))
+""", timeout=600)
+    assert all(d.values()), d
+
+
+@pytest.mark.slow
+def test_sharded_walk_hub_degrees_hit_every_cohort():
+    """Degrees spanning small bucket, medium bucket, and the chunked
+    huge-degree tail (> 512) stay bit-identical across the exchange."""
+    d = run_child(HEADER + """
+from repro.graph import csr_from_edges
+from repro.core import algorithms as alg
+from repro.core.engine import random_walk
+from repro.shard import sharded_random_walk
+rng = np.random.default_rng(0)
+V = 2000
+src = np.concatenate([np.zeros(900, int), np.full(300, 1000), rng.integers(0, V, 4000)])
+dst = np.concatenate([rng.integers(1, V, 900), rng.integers(0, V, 300), rng.integers(0, V, 4000)])
+w = rng.random(src.shape[0]).astype(np.float32) + 0.1
+g = csr_from_edges(V, src, dst, weights=w, symmetrize=True)
+md = g.max_degree()
+assert md > 512  # the chunked tail must actually engage
+seeds = jnp.asarray(np.concatenate([[0, 1000], rng.integers(0, V, 62)]).astype(np.int32))
+key = jax.random.PRNGKey(13)
+mesh = jax.make_mesh((8,), ("data",))
+out = {"maxdeg": int(md)}
+for spec in (alg.deepwalk(), alg.weighted_random_walk(), alg.node2vec()):
+    ref = random_walk(g, seeds, key, depth=8, spec=spec, max_degree=md, backend="reference")
+    res = sharded_random_walk(mesh, g, seeds, key, depth=8, spec=spec, max_degree=md, backend="reference")
+    out[spec.name] = bool(jnp.array_equal(ref.walks, res.walks))
+print(json.dumps(out))
+""")
+    assert d["maxdeg"] > 512
+    assert all(v for k, v in d.items() if k != "maxdeg"), d
+
+
+@pytest.mark.slow
+def test_sharded_service_cohorts():
+    """placement="sharded": heterogeneous request cohorts drain through the
+    mesh, return exact per-request geometry, walk real edges, and are
+    deterministic across identically-constructed services."""
+    d = run_child(HEADER + """
+from repro.graph import powerlaw_graph
+from repro.core import algorithms as alg
+from repro.serve import SamplingService
+g = powerlaw_graph(1000, seed=0, weighted=True)
+mesh = jax.make_mesh((8,), ("data",))
+
+def serve():
+    svc = SamplingService(g, mesh=mesh, placement="sharded",
+                          backend="reference", key=jax.random.PRNGKey(9))
+    rng = np.random.default_rng(1)
+    tickets = {}
+    for i in range(8):
+        spec = [alg.deepwalk(), alg.weighted_random_walk(), alg.node2vec()][i % 3]
+        n, dep = int(rng.integers(8, 49)), int(rng.choice([4, 6, 10]))
+        rid = svc.submit(rng.integers(0, 1000, n), depth=dep, spec=spec)
+        tickets[rid] = (n, dep)
+    return svc, tickets, svc.drain()
+
+svc, tickets, res = serve()
+_, _, res2 = serve()
+ip, ind = np.asarray(g.indptr), np.asarray(g.indices)
+geom_ok, edges_ok, det_ok = True, True, True
+for rid, (n, dep) in tickets.items():
+    r = res[rid]
+    geom_ok &= r.walks.shape == (n, dep + 1) and bool((r.lengths >= 1).all())
+    det_ok &= bool(np.array_equal(r.walks, res2[rid].walks))
+    for row in r.walks:
+        for a, b in zip(row[:-1], row[1:]):
+            if a < 0 or b < 0: break
+            edges_ok &= b in ind[ip[a]:ip[a+1]]
+print(json.dumps({"geom": geom_ok, "edges": bool(edges_ok), "det": det_ok,
+                  "launches": svc.stats.sharded_launches}))
+""")
+    assert d["geom"] and d["edges"] and d["det"] and d["launches"] >= 1
+
+
+@pytest.mark.slow
+def test_instance_parallel_streams_disjoint_across_mesh_sizes():
+    """Folding the axis size means device d of a 2-way and a 4-way mesh draw
+    different streams — before the fix, the first instance group's walks
+    were identical across mesh widths (same ``fold_in(key, d)``)."""
+    d = run_child(HEADER + """
+from repro.graph import powerlaw_graph
+from repro.core import algorithms as alg
+from repro.core.distributed import instance_parallel_walk
+g = powerlaw_graph(512, seed=1, weighted=True)
+seeds = jax.random.randint(jax.random.PRNGKey(0), (64,), 0, 512)
+runs = {}
+for D in (2, 4):
+    mesh = jax.make_mesh((D,), ("data",))
+    res = instance_parallel_walk(mesh, g, seeds, jax.random.PRNGKey(1), depth=16,
+                                 spec=alg.deepwalk(), max_degree=g.max_degree())
+    runs[D] = np.asarray(res.walks)
+# device 0 of the 4-way mesh owns instances [0:16); under the old keying it
+# replayed device 0 of the 2-way mesh verbatim
+head_differs = not np.array_equal(runs[2][:16], runs[4][:16])
+ip, ind = np.asarray(g.indptr), np.asarray(g.indices)
+bad = 0
+for row in runs[4]:
+    for a, b in zip(row[:-1], row[1:]):
+        if a < 0 or b < 0: break
+        if b not in ind[ip[a]:ip[a+1]]: bad += 1
+print(json.dumps({"head_differs": bool(head_differs), "bad": bad}))
+""")
+    assert d["head_differs"] and d["bad"] == 0
