@@ -3,11 +3,15 @@
 Times the backend dispatcher's two routes on identical inputs (same counted
 RNG budget, so both compute the same selections) across several
 (instances, pool, k) shapes, and records wall times so the perf trajectory
-is measurable PR-over-PR.  On CPU the Pallas route runs in interpret mode —
-expect it to LOSE there; the number that matters is the ratio on TPU, where
-the kernel fuses CTPS build + search + BRS retry in VMEM.
+is measurable PR-over-PR.  On non-TPU hosts the Pallas route runs in
+interpret mode — that times the interpreter, not the kernel — so it is
+SKIPPED by default there (rows carry ``pallas_interpret`` /
+``pallas_skipped`` tags); ``--include-interpret`` restores it.  The number
+that matters is the ratio on TPU, where the kernel fuses CTPS build +
+search + BRS retry in VMEM.
 
 Usage:  PYTHONPATH=src python benchmarks/bench_select.py [--iters 8]
+        [--skip-interpret | --include-interpret]
 """
 from __future__ import annotations
 
@@ -35,7 +39,7 @@ SHAPES = [
 OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_select.json"
 
 
-def bench_shape(i_dim, p, k, max_iters):
+def bench_shape(i_dim, p, k, max_iters, skip_pallas):
     key = jax.random.PRNGKey(i_dim * p + k)
     b = jax.random.uniform(key, (i_dim, p))
 
@@ -48,7 +52,7 @@ def bench_shape(i_dim, p, k, max_iters):
         return timeit(fn, key, b, warmup=1, iters=3)
 
     t_ref = run("reference")
-    t_pal = run("pallas")
+    t_pal = None if skip_pallas else run("pallas")
     return {
         "instances": i_dim,
         "pool": p,
@@ -56,30 +60,47 @@ def bench_shape(i_dim, p, k, max_iters):
         "max_iters": max_iters,
         "reference_s": t_ref,
         "pallas_s": t_pal,
-        "speedup": t_ref / t_pal if t_pal > 0 else None,
+        "speedup": t_ref / t_pal if t_pal else None,
+        "pallas_interpret": jax.default_backend() != "tpu",
+        "pallas_skipped": skip_pallas,
     }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=8, help="retry budget (rounds)")
+    ap.add_argument("--skip-interpret", dest="skip_interpret",
+                    action="store_true", default=None,
+                    help="skip the interpret-mode Pallas timing (default on non-TPU)")
+    ap.add_argument("--include-interpret", dest="skip_interpret",
+                    action="store_false",
+                    help="time the interpret-mode Pallas route anyway")
     args = ap.parse_args()
+    on_tpu = jax.default_backend() == "tpu"
+    skip = args.skip_interpret
+    if skip is None:
+        skip = not on_tpu
+    skip_pallas = skip and not on_tpu
 
     rows = []
     for i_dim, p, k in SHAPES:
-        row = bench_shape(i_dim, p, k, args.iters)
+        row = bench_shape(i_dim, p, k, args.iters, skip_pallas)
         rows.append(row)
+        pal = (
+            f"pallas {row['pallas_s']*1e3:8.2f} ms   speedup {row['speedup']:.2f}x"
+            if row["pallas_s"] is not None
+            else "pallas    skipped (interpret mode)"
+        )
         print(
             f"I={i_dim:5d} P={p:5d} k={k:2d}  "
-            f"reference {row['reference_s']*1e3:8.2f} ms   "
-            f"pallas {row['pallas_s']*1e3:8.2f} ms   "
-            f"speedup {row['speedup']:.2f}x"
+            f"reference {row['reference_s']*1e3:8.2f} ms   " + pal
         )
 
     payload = {
         "bench": "its_brs selection, reference vs pallas backend",
         "device": jax.default_backend(),
-        "pallas_interpret": jax.default_backend() != "tpu",
+        "pallas_interpret": not on_tpu,
+        "skip_interpret": skip,
         "results": rows,
     }
     OUT_PATH.write_text(json.dumps(payload, indent=2) + "\n")

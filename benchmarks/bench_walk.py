@@ -5,12 +5,22 @@ Sweeps {deepwalk, node2vec, mhrw, rw_restart} × {reference, pallas} ×
 forced-opaque node2vec configuration (transition program stripped, i.e. the
 pre-transition-program dense full-context gather) so the headline number —
 the bucketed dynamic-bias path vs the dense gather it replaced — is measured
-PR-over-PR.  On CPU the Pallas route runs in interpret mode — expect it to
-LOSE there; the cross-cutting numbers are reference-vs-reference (bucketed
-vs gather) on any host and the kernel ratio on TPU.
+PR-over-PR, and the adaptive-selection serving comparison (DESIGN.md §13):
+a static-bias serving workload through the SamplingService with the
+selection method pinned to "its" vs "alias" (forced — the cost model
+auto-picks rejection for deepwalk's uniform bias), tables prebuilt via
+``prewarm()``, whose ratio is the alias-table amortization headline.
+
+Every row is tagged ``pallas_interpret``; on non-TPU hosts interpret-mode
+Pallas rows measure the interpreter, not the kernel, so they are SKIPPED by
+default (``--include-interpret`` restores them; ``--skip-interpret`` forces
+the skip even on TPU).  The cross-cutting numbers are reference-vs-reference
+on any host and the kernel ratios on TPU.
 
 Usage:  PYTHONPATH=src python benchmarks/bench_walk.py [--iters 3]
-(also exposed as ``run()`` rows through benchmarks/run.py)
+        [--skip-interpret | --include-interpret]
+(also exposed as ``run()`` rows through benchmarks/run.py, which skips
+interpret-mode rows by default on CPU)
 """
 from __future__ import annotations
 
@@ -27,9 +37,13 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 from benchmarks.common import BENCH_GRAPHS, row, timeit  # noqa: E402
 
 from repro.core import algorithms as alg  # noqa: E402
-from repro.core.engine import random_walk  # noqa: E402
+from repro.core import backend as bk  # noqa: E402
+from repro.core import methods as mt  # noqa: E402
+from repro.core import transition as tp  # noqa: E402
+from repro.core.engine import flat_method_plan, random_walk  # noqa: E402
 from repro.core.oom import oom_random_walk  # noqa: E402
 from repro.graph.partition import partition_by_vertex_range  # noqa: E402
+from repro.serve.service import SamplingService  # noqa: E402
 
 OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_walk.json"
 
@@ -38,6 +52,7 @@ WALKERS = 1024
 DEPTH = 8
 OOM_PARTS = 4
 OOM_CHUNK = 1024
+SERVE_REQUESTS = 4
 KEY = jax.random.PRNGKey(0)
 
 
@@ -51,6 +66,20 @@ def _specs(g):
         "mhrw": alg.metropolis_hastings_walk(),
         "rw_restart": alg.random_walk_with_restart(0.15),
     }
+
+
+def _method_plans(g, specs):
+    """Auto-picked per-cohort selection methods for every flat-bias spec."""
+    md = g.max_degree()
+    buckets, use_chunked = bk.walk_bucket_plan(md)
+    plans = {}
+    for name, spec in specs.items():
+        program = tp.lower(spec)
+        if program.mode != "flat":
+            continue
+        methods, _ = flat_method_plan(g, program, md)
+        plans[name] = mt.describe_plan(methods, buckets, use_chunked)
+    return plans
 
 
 def bench_inmem(g, spec, backend, iters):
@@ -80,22 +109,58 @@ def bench_oom(g, spec, backend, iters):
     return timeit(lambda: jax.numpy.asarray(fn()), warmup=1, iters=iters)
 
 
-def run(iters: int = 3):
+def bench_serving(g, selection_method, iters):
+    """A static-bias serving workload with the selection method PINNED.
+
+    ``SERVE_REQUESTS`` deepwalk requests per drain through one
+    SamplingService, tables prebuilt with ``prewarm()`` so every drain
+    reuses them — the amortization the adaptive runtime exists for.
+    Reference backend: the ratio must hold without kernel help.
+    """
+    spec = dataclasses.replace(alg.deepwalk(), selection_method=selection_method)
+    svc = SamplingService(g, backend="reference", key=jax.random.PRNGKey(3))
+    svc.prewarm(spec)
+    rng = np.random.default_rng(2)
+    seed_sets = [
+        rng.integers(0, g.num_vertices, WALKERS) for _ in range(SERVE_REQUESTS)
+    ]
+
+    def fn():
+        for s in seed_sets:
+            svc.submit(s, depth=DEPTH, spec=spec)
+        out = svc.drain()
+        return jax.numpy.asarray(next(iter(out.values())).walks)
+
+    return timeit(fn, warmup=1, iters=iters)
+
+
+def run(iters: int = 3, skip_interpret: bool | None = None):
     g = BENCH_GRAPHS[GRAPH]()
     on_tpu = jax.default_backend() == "tpu"
+    if skip_interpret is None:
+        skip_interpret = not on_tpu  # interpret-mode rows measure the interpreter
+    specs = _specs(g)
+    method_plans = _method_plans(g, specs)
     results = []
-    for name, spec in _specs(g).items():
+    for name, spec in specs.items():
         for backend in ("reference", "pallas"):
+            interp = backend == "pallas" and not on_tpu
+            if interp and skip_interpret:
+                continue
             for mode, bench in (("inmem", bench_inmem), ("oom", bench_oom)):
                 if name == "node2vec_gather" and mode == "oom":
                     continue  # the dense OOM gather at pl50k degrees is pathological
                 if backend == "pallas" and mode == "oom" and not on_tpu:
                     continue  # interpret-mode kernels in the drain loop: minutes
                 secs = bench(g, spec, backend, iters)
-                results.append({
+                r = {
                     "graph": GRAPH, "algo": name, "mode": mode,
                     "backend": backend, "seconds": secs,
-                })
+                    "pallas_interpret": interp,
+                }
+                if mode == "inmem" and name in method_plans:
+                    r["methods"] = method_plans[name]
+                results.append(r)
                 yield row(f"walk_{name}_{mode}_{backend}", secs * 1e6,
                           f"walkers={WALKERS};depth={DEPTH}")
 
@@ -107,12 +172,33 @@ def run(iters: int = 3):
     })
     yield row("walk_node2vec_bucketed_vs_gather", 0.0, f"speedup={speedup:.2f}x")
 
+    # -- adaptive selection: pinned-method serving comparison (§13) ---------
+    serve_secs = {}
+    for m in ("its", "alias", "rejection"):
+        secs = bench_serving(g, m, iters)
+        serve_secs[m] = secs
+        results.append({
+            "graph": GRAPH, "algo": "deepwalk", "mode": "serve",
+            "backend": "reference", "selection_method": m, "seconds": secs,
+            "pallas_interpret": False,
+        })
+        yield row(f"walk_serve_deepwalk_{m}", secs * 1e6,
+                  f"requests={SERVE_REQUESTS};walkers={WALKERS}")
+    alias_speedup = serve_secs["its"] / serve_secs["alias"]
+    results.append({
+        "graph": GRAPH, "algo": "deepwalk", "mode": "serve",
+        "derived": "alias_vs_its_speedup", "speedup": alias_speedup,
+    })
+    yield row("walk_serve_alias_vs_its", 0.0, f"speedup={alias_speedup:.2f}x")
+
     OUT_PATH.write_text(json.dumps({
         # shared benchmark-JSON schema (DESIGN.md §9): diffable PR-over-PR
         "bench": "walk",
         "device": jax.default_backend(),
         "pallas_interpret": not on_tpu,
+        "skip_interpret": skip_interpret,
         "graph": GRAPH, "walkers": WALKERS, "depth": DEPTH,
+        "method_plans": method_plans,
         "results": results,
     }, indent=2))
     yield row("walk_json", 0.0, str(OUT_PATH.name))
@@ -121,9 +207,15 @@ def run(iters: int = 3):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--skip-interpret", dest="skip_interpret",
+                    action="store_true", default=None,
+                    help="skip interpret-mode Pallas rows (default on non-TPU)")
+    ap.add_argument("--include-interpret", dest="skip_interpret",
+                    action="store_false",
+                    help="time interpret-mode Pallas rows anyway")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    for r in run(args.iters):
+    for r in run(args.iters, skip_interpret=args.skip_interpret):
         print(r, flush=True)
 
 

@@ -163,6 +163,15 @@ class SamplingSpec:
     >>> from repro.core import algorithms as alg
     >>> lower(alg.node2vec()).mode, lower(alg.deepwalk()).mode
     ('window', 'flat')
+
+    Flat-bias specs may pin the selection method instead of letting the
+    cost model auto-pick per degree bucket (``selection_method``,
+    DESIGN.md §13):
+
+    >>> import dataclasses
+    >>> pinned = dataclasses.replace(alg.deepwalk(), selection_method="alias")
+    >>> lower(alg.deepwalk()).method, lower(pinned).method
+    ('auto', 'alias')
     """
 
     vertex_bias: BiasFn = uniform_vertex_bias
@@ -204,4 +213,10 @@ class SamplingSpec:
     # ``object`` only to avoid a circular import; it must be a
     # TransitionProgram (or None).
     transition: Optional[object] = None
+    # Selection-method override for the flat-bias fast path (DESIGN.md §13):
+    # None defers to the transition program's ``method`` (default "auto" —
+    # the cost model picks per degree bucket); "its"/"alias"/"rejection"
+    # force one method for every bucket.  ``core.transition.lower`` stamps
+    # the override onto the lowered program.
+    selection_method: Optional[str] = None
     name: str = "custom"

@@ -21,6 +21,7 @@ routes through this module, which owns the plumbing the kernels need:
 """
 from __future__ import annotations
 
+import logging
 from typing import Literal, Mapping
 
 import jax
@@ -28,13 +29,17 @@ import jax.numpy as jnp
 
 from repro.core import select as sel
 from repro.kernels import ref
+from repro.kernels.alias_select import alias_step_pallas
 from repro.kernels.its_select import its_select_pallas
 from repro.kernels.walk_step import (
     _EPS,
     pad_csr_for_kernel,
+    reject_step_pallas,
     walk_step_pallas,
     walk_step_window_pallas,
 )
+
+_logger = logging.getLogger(__name__)
 
 Backend = Literal["auto", "reference", "pallas"]
 
@@ -95,7 +100,20 @@ def select_without_replacement(
     """
     be = resolve_backend(backend)
     if be == "reference" or method != "its_brs":
-        return sel.select_without_replacement(key, biases, mask, k, method=method, max_iters=max_iters)
+        res = sel.select_without_replacement(key, biases, mask, k, method=method, max_iters=max_iters)
+        if be == "pallas":
+            # requested the kernel path but the method has no kernel: serve
+            # from reference and SAY SO — the returned flag (and this
+            # trace-time log) keep the adaptive auto-pick observable instead
+            # of a silent substitution (DESIGN.md §13).
+            _logger.debug(
+                "select_without_replacement(method=%r) has no pallas kernel; "
+                "serving backend=%r request from the reference path",
+                method,
+                backend,
+            )
+            res = res._replace(fell_back=True)
+        return res
 
     b = _masked(biases, mask)
     batch_shape = b.shape[:-1]
@@ -321,6 +339,148 @@ def walk_step_flat_reference(
             jax.random.fold_in(key, 1), indptr, indices, flat_bias, safe, deg, buckets[-1], nxt,
             rand=tail_rand,
         )
+    return nxt
+
+
+# ---------------------------------------------------------------------------
+# Adaptive per-bucket method dispatch (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def walk_step_adaptive(
+    key: jax.Array,
+    indptr: jax.Array,
+    indices: jax.Array,
+    flat_bias: jax.Array,
+    padded: Mapping[int, tuple],
+    cur: jax.Array,
+    *,
+    buckets: tuple,
+    use_chunked: bool,
+    methods: tuple,
+    tables,
+    backend: str,
+    max_degree: int | None = None,
+    interpret: bool | None = None,
+    rand: jax.Array | None = None,
+    tail_rand: jax.Array | None = None,
+    rej_rand: jax.Array | None = None,
+) -> jax.Array:
+    """One flat-bias transition with a per-cohort selection method.
+
+    The adaptive generalization of :func:`walk_step_bucketed` /
+    :func:`walk_step_flat_reference`: ``methods`` (static, from
+    ``core.methods.plan_methods``) names the draw each degree cohort runs —
+    ``"its"`` (the legacy cumsum kernel/mirror), ``"alias"`` (O(1) draw from
+    ``tables.prob``/``tables.alias``), or ``"rejection"`` (counted-budget
+    envelope test against ``tables.row_max``) — one entry per bucket plus
+    one for the chunked tail when present.  ONE function serves both
+    backends: alias and rejection cohorts dispatch a Pallas kernel under
+    ``backend="pallas"`` and the bit-identical pure-jnp flat draws under
+    ``"reference"``; ITS cohorts keep the existing kernel/mirror pair.
+
+    Counted RNG (all cohorts, both backends): the single bucket uniform is
+    ``fold_in(key, 0)`` — alias draws consume the SAME uniform an ITS cohort
+    would, so each walker's stream is method-independent plumbing-wise; the
+    ITS/alias tail uses ``fold_in(key, 1)``; the rejection budget (shared by
+    every rejection cohort including the tail — each walker lives in exactly
+    one cohort) is ``rejection_randoms(fold_in(key, 2))``, generated only
+    when some cohort rejects.  ``rand`` / ``tail_rand`` / ``rej_rand``
+    override the draws (the mesh-sharded drain supplies instance-indexed
+    streams, DESIGN.md §12).
+
+    O(1) methods have no O(degree) window constraint, so alias/rejection
+    TAILS draw over the full row via the shared flat-gather helpers —
+    removing the two-pass chunked scan from hub vertices entirely; only an
+    ITS tail still scans.
+    """
+    safe = jnp.maximum(cur, 0)
+    starts = indptr[safe]
+    deg = jnp.where(cur >= 0, indptr[safe + 1] - starts, 0)
+    if rand is None:
+        rand = jax.random.uniform(jax.random.fold_in(key, 0), cur.shape, dtype=jnp.float32)
+    r = rand
+    if any(m == "rejection" for m in methods) and rej_rand is None:
+        rej_rand = sel.rejection_randoms(jax.random.fold_in(key, 2), cur.shape)
+    rmv = None
+    if tables.row_max is not None:
+        rmv = jnp.where(cur >= 0, tables.row_max[safe], 0.0)
+    pal = backend == "pallas"
+    tables_p = None
+    if pal and any(m == "alias" for m in methods):
+        # one padding to the largest segment serves every alias cohort (the
+        # same geometry argument as pad_walk_csr); pad values are never read
+        # for real rows
+        a_pad, p_pad = pad_csr_for_kernel(tables.alias, tables.prob, max(buckets))
+        tables_p = (p_pad, a_pad)
+
+    nxt = jnp.full_like(cur, -1)
+    lo = 0
+    for i, seg in enumerate(buckets):
+        inds_p, bias_p = padded[seg]
+        # same truncation-absorb policy as walk_step_bucketed: an understated
+        # max_degree degrades to neighborhood truncation (cap = seg inside
+        # each draw), never silent walker death
+        absorb = i == len(buckets) - 1 and not use_chunked
+        inb = (deg > lo) & ((deg <= seg) | absorb)
+        st = jnp.where(inb, starts, 0)
+        dg = jnp.where(inb, deg, 0)
+        m = methods[i]
+        if m == "alias":
+            if pal:
+                cand = alias_step_pallas(
+                    st, dg, inds_p, tables_p[0], tables_p[1], r,
+                    max_seg=seg, interpret=interpret,
+                )
+            else:
+                cand = sel.alias_draw_flat(
+                    st, dg, tables.prob, tables.alias, indices, r, cap=seg
+                )
+        elif m == "rejection":
+            if pal:
+                cand = reject_step_pallas(
+                    st, dg, inds_p, bias_p, rmv, rej_rand,
+                    max_seg=seg, interpret=interpret,
+                )
+            else:
+                cand = sel.rejection_draw_flat(
+                    st, dg, flat_bias, rmv, indices, rej_rand, cap=seg
+                )
+        elif pal:
+            cand = walk_step_pallas(
+                st, jnp.minimum(dg, seg), inds_p, bias_p, r,
+                max_seg=seg, interpret=interpret,
+            )
+        else:
+            width = 2 * seg if max_degree is None else seg + min(seg, max_degree)
+            cand = ref.walk_step_block_ref(
+                st, jnp.minimum(dg, seg), inds_p, bias_p, r, seg=seg, width=width
+            )
+        nxt = jnp.where(inb, cand, nxt)
+        lo = seg
+
+    if use_chunked:
+        huge = deg > buckets[-1]
+        st = jnp.where(huge, starts, 0)
+        dg = jnp.where(huge, deg, 0)
+        mt = methods[len(buckets)]
+        if mt == "alias":
+            if tail_rand is None:
+                tail_rand = jax.random.uniform(
+                    jax.random.fold_in(key, 1), cur.shape, dtype=jnp.float32
+                )
+            cand = sel.alias_draw_flat(
+                st, dg, tables.prob, tables.alias, indices, tail_rand
+            )
+            nxt = jnp.where(huge, cand, nxt)
+        elif mt == "rejection":
+            cand = sel.rejection_draw_flat(st, dg, flat_bias, rmv, indices, rej_rand)
+            nxt = jnp.where(huge, cand, nxt)
+        else:
+            nxt = _chunked_tail(
+                jax.random.fold_in(key, 1), indptr, indices, flat_bias, safe, deg,
+                buckets[-1], nxt, rand=tail_rand,
+            )
     return nxt
 
 

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core.api import EdgeCtx, SamplingSpec, VertexCtx
 from repro.core import backend as bk
+from repro.core import methods as mt
 from repro.core import select as sel
 from repro.core import transition as tp
 from repro.graph.csr import CSRGraph, neighbors_padded
@@ -117,7 +118,9 @@ def walk_flat_transition(key: jax.Array, graph: CSRGraph, indices_out: jax.Array
                          buckets: tuple, use_chunked: bool,
                          max_degree: int | None = None, row_of=None,
                          program: tp.TransitionProgram | None = None,
-                         home: jax.Array | None = None) -> jax.Array:
+                         home: jax.Array | None = None,
+                         methods: tuple | None = None,
+                         tables=None) -> jax.Array:
     """SELECT + epilogue of one flat-bias walk step (shared by the in-memory
     engine and the §V out-of-memory drain loop).
 
@@ -127,11 +130,22 @@ def walk_flat_transition(key: jax.Array, graph: CSRGraph, indices_out: jax.Array
     row-lookup ids (identity in-memory; partition localization in the OOM
     drain); ``indices_out`` holds the ids the walk emits (global).  The
     post-select update runs the spec's lowered transition-program epilogue.
+
+    ``methods``/``tables`` (from ``core.methods.plan_for_graph``) engage the
+    adaptive per-bucket selection runtime (DESIGN.md §13); an absent or
+    all-ITS plan keeps the legacy kernel/mirror pair — bit-for-bit the
+    pre-adaptive walks.
     """
     program = tp.lower(spec) if program is None else program
     vq = v if row_of is None else row_of(v)
     kf = jax.random.fold_in(key, 1)
-    if be == "pallas":
+    if methods is not None and not mt.is_trivial(methods):
+        u = bk.walk_step_adaptive(kf, graph.indptr, indices_out, flat_bias,
+                                  padded, vq, buckets=buckets,
+                                  use_chunked=use_chunked, methods=methods,
+                                  tables=tables, backend=be,
+                                  max_degree=max_degree)
+    elif be == "pallas":
         u = bk.walk_step_bucketed(kf, graph.indptr, indices_out, flat_bias,
                                   padded, vq, buckets=buckets, use_chunked=use_chunked)
     else:
@@ -273,10 +287,34 @@ class WalkResult(NamedTuple):
     sampled_edges: jax.Array  # () total sampled edges (for SEPS)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("depth", "spec", "max_degree", "method", "backend"),
-)
+def flat_method_plan(
+    graph: CSRGraph,
+    program: tp.TransitionProgram,
+    max_degree: int,
+) -> tuple[tuple, mt.MethodTables]:
+    """Host-side adaptive selection plan for a flat-bias program.
+
+    Returns ``(methods, tables)`` for ``walk_flat_transition``: the
+    cost-model pick per degree cohort plus the prebuilt tables it needs
+    (cached per (graph, bias fn) — ``core.methods``).  Degrades to the
+    legacy all-ITS plan when planning is impossible or pointless: non-flat
+    programs (empty plan), a forced ``method="its"``, or a TRACED graph
+    (``random_walk`` under vmap/make_jaxpr cannot inspect concrete bucket
+    stats — those callers keep the pre-adaptive behavior).
+    """
+    if program.mode != "flat":
+        return (), mt.EMPTY_TABLES
+    buckets, use_chunked = bk.walk_bucket_plan(max_degree)
+    n = len(buckets) + (1 if use_chunked else 0)
+    if program.method == "its" or isinstance(graph.indices, jax.core.Tracer):
+        return ("its",) * n, mt.EMPTY_TABLES
+    override = None if program.method == "auto" else program.method
+    return mt.plan_for_graph(
+        graph, program.bias.fn, buckets=buckets, use_chunked=use_chunked,
+        override=override,
+    )
+
+
 def random_walk(
     graph: CSRGraph,
     seeds: jax.Array,
@@ -299,6 +337,12 @@ def random_walk(
     materialized.  Only opaque programs keep the dense full-context gather,
     still dispatching the ITS draw to the selection kernel.
 
+    Flat-bias programs additionally run the adaptive selection runtime
+    (DESIGN.md §13): a host-side cost model picks ITS / alias-table /
+    rejection per degree cohort (``TransitionProgram.method`` overrides it)
+    and the prebuilt tables are cached per (graph, bias), so repeated
+    launches reuse them.
+
     Seeds may be ``-1``: those instances are dead on arrival and emit all--1
     rows (the padding contract the batched service relies on).
 
@@ -316,6 +360,34 @@ def random_walk(
     >>> bool(jnp.all(res.lengths == 4))  # no dead ends on a cycle
     True
     """
+    sel_methods, tables = flat_method_plan(graph, tp.lower(spec), max_degree)
+    return _random_walk_impl(
+        graph, seeds, key, tables, depth=depth, spec=spec,
+        max_degree=max_degree, method=method, backend=backend,
+        sel_methods=sel_methods,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "spec", "max_degree", "method", "backend", "sel_methods"),
+)
+def _random_walk_impl(
+    graph: CSRGraph,
+    seeds: jax.Array,
+    key: jax.Array,
+    tables: mt.MethodTables,
+    *,
+    depth: int,
+    spec: SamplingSpec,
+    max_degree: int,
+    method: str = "its_brs",
+    backend: bk.Backend = "auto",
+    sel_methods: tuple = (),
+) -> WalkResult:
+    """Jitted body of :func:`random_walk` — the selection plan
+    (``sel_methods``, static) and its tables (dynamic pytree; ``None``
+    fields cost nothing) arrive precomputed from the host-side wrapper."""
     num_inst = seeds.shape[0]
     be = bk.resolve_backend(backend)
     program = tp.lower(spec)
@@ -341,7 +413,8 @@ def random_walk(
             nxt = walk_flat_transition(
                 kstep, graph, graph.indices, flat_bias, padded, cur, prev, it,
                 spec, be, buckets=buckets, use_chunked=use_chunked,
-                program=program, home=home,
+                program=program, home=home, methods=sel_methods or None,
+                tables=tables,
             )
         elif mode == "window":
             nxt = walk_window_transition(
@@ -403,25 +476,30 @@ def random_walk_segments(
     >>> bool(jnp.array_equal(fused.walks[1], solo.walks))
     True
     """
+    sel_methods, tables = flat_method_plan(graph, tp.lower(spec), max_degree)
     return _random_walk_segments(
-        graph, seeds, keys, depth=depth, spec=spec, max_degree=max_degree,
-        method=method, backend=backend,
+        graph, seeds, keys, tables, depth=depth, spec=spec, max_degree=max_degree,
+        method=method, backend=backend, sel_methods=sel_methods,
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("depth", "spec", "max_degree", "method", "backend"),
+    static_argnames=("depth", "spec", "max_degree", "method", "backend", "sel_methods"),
 )
-def _random_walk_segments(graph, seeds, keys, *, depth, spec, max_degree, method, backend):
+def _random_walk_segments(graph, seeds, keys, tables, *, depth, spec, max_degree,
+                          method, backend, sel_methods):
     # the OUTER jit is what makes fused serving cheap: a jitted callee
     # invoked under vmap is traced inline (no cache), so without this
-    # wrapper every fused launch would re-trace random_walk per call
+    # wrapper every fused launch would re-trace the walk per call.  The
+    # selection plan is computed ONCE by the public wrapper (vmapping the
+    # public random_walk would hand its planner a traced graph); tables are
+    # closed over, i.e. broadcast across the request axis.
     inner = functools.partial(
-        random_walk, depth=depth, spec=spec, max_degree=max_degree,
-        method=method, backend=backend,
+        _random_walk_impl, depth=depth, spec=spec, max_degree=max_degree,
+        method=method, backend=backend, sel_methods=sel_methods,
     )
-    return jax.vmap(lambda s, k: inner(graph, s, k))(seeds, keys)
+    return jax.vmap(lambda s, k: inner(graph, s, k, tables))(seeds, keys)
 
 
 class SampleResult(NamedTuple):

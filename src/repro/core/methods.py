@@ -1,0 +1,228 @@
+"""Adaptive selection runtime: per-bucket method planning (DESIGN.md §13).
+
+C-SAW's selection engine is pure ITS — O(degree) cumsum per draw.  For a
+*static* flat bias that is wasteful: alias tables (``select.build_alias``)
+amortize an O(E) build into O(1) draws, and near-uniform biases accept a
+rejection-sampled candidate in ~1 round without any table at all.  Neither
+helps a *dynamic* window bias (the table/envelope would be stale every
+step), so the planner here only ever runs for ``FlatBias`` programs; window
+and opaque modes stay on ITS.
+
+The plan is computed HOST-SIDE from concrete bucket statistics (float64
+numpy, so every execution path — in-memory, OOM drain, sharded, serving —
+derives the identical plan from the same graph+bias) and enters the jitted
+step as a static tuple ``methods``: one entry per degree bucket plus one
+for the chunked huge-degree tail when present.
+
+Cost model, per cohort (``TransitionProgram.method == "auto"``):
+
+  - empty cohort                                 → ``"its"`` (nothing to draw;
+    skips table construction for buckets the graph never populates)
+  - any zero-bias edge in the cohort             → ``"alias"`` (rejection
+    could burn its whole budget proposing dead edges)
+  - mean row uniformity ``mean/max >= 0.75``     → ``"rejection"`` (expected
+    rounds ``<= 1/0.75``; the 8-round budget exhausts w.p. ``<= 0.25**8``)
+  - otherwise                                    → ``"alias"``
+
+ITS is never auto-picked for a populated flat cohort — with prebuilt tables
+both new methods dominate it.  ``method="its"`` (or
+``SamplingSpec.selection_method="its"``) forces the legacy behavior.
+
+Alias tables and rejection envelopes are cached per ``(graph, bias_fn)`` in
+a small strong-ref LRU so repeated launches — every request the
+``SamplingService`` drains — reuse them; that amortization is the headline
+serving win benchmarked in BENCH_walk.json.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import select as sel
+
+#: Auto-pick rejection only when the mean row uniformity (row mean bias over
+#: row max bias) of a cohort is at least this — acceptance rate >= 0.75.
+REJECTION_UNIFORMITY = 0.75
+
+#: Bounded plan/table cache: (id(graph.indices), bias_fn) -> _PlanEntry.
+_PLAN_CACHE: "OrderedDict[tuple, _PlanEntry]" = OrderedDict()
+_PLAN_CACHE_MAX = 8
+
+
+class MethodTables(NamedTuple):
+    """Prebuilt per-method arrays threaded through the jitted step as a
+    pytree.  ``None`` fields are methods the plan never uses (a ``None``
+    leaf is static structure, so an all-ITS plan adds nothing to the
+    trace)."""
+
+    prob: Optional[jax.Array] = None  # (E,) f32 alias acceptance thresholds
+    alias: Optional[jax.Array] = None  # (E,) int32 row-local alias redirects
+    row_max: Optional[jax.Array] = None  # (V,) f32 rejection envelopes
+
+
+EMPTY_TABLES = MethodTables()
+
+
+def is_trivial(methods: tuple) -> bool:
+    """An all-ITS plan — the pre-adaptive fast path, no tables needed."""
+    return all(m == "its" for m in methods)
+
+
+class _PlanEntry:
+    """Cached per-(graph, bias) state: host stats + lazily built tables.
+
+    Holds strong refs to the keyed objects so the ``id()`` half of the cache
+    key can never be recycled while the entry lives.
+    """
+
+    def __init__(self, indices, bias_fn, bias_np, deg):
+        self._pins = (indices, bias_fn)
+        self.bias_np = bias_np  # (E,) float64, clipped at 0
+        self.deg = deg  # (V,) int64
+        self._row_stats = None
+        self._alias = None
+        self._row_max = None
+        self.plans: dict = {}
+
+    def row_stats(self, indptr):
+        if self._row_stats is None:
+            self._row_stats = row_stats(indptr, self.bias_np, self.deg)
+        return self._row_stats
+
+    def tables(self, methods, indptr) -> MethodTables:
+        prob = alias = row_max = None
+        if any(m == "alias" for m in methods):
+            if self._alias is None:
+                p, a = sel.build_alias(indptr, self.bias_np)
+                self._alias = (jnp.asarray(p), jnp.asarray(a))
+            prob, alias = self._alias
+        if any(m == "rejection" for m in methods):
+            if self._row_max is None:
+                self._row_max = jnp.asarray(sel.build_row_max(indptr, self.bias_np))
+            row_max = self._row_max
+        return MethodTables(prob=prob, alias=alias, row_max=row_max)
+
+
+def row_stats(indptr, bias_np, deg=None):
+    """Per-row ``(mean, max, min)`` of a clipped CSR-order bias (host f64).
+
+    Shared by the cached in-memory planner and the OOM drain's per-partition
+    pre-pass (which aggregates stats across partitions before planning once).
+    Rows of degree 0 report all-zero stats and are excluded by the cost
+    model's liveness mask.
+    """
+    deg = np.diff(np.asarray(indptr)).astype(np.int64) if deg is None else deg
+    e = bias_np.shape[0]
+    if e == 0:
+        z = np.zeros(deg.shape[0])
+        return (z, z, z)
+    starts = np.minimum(np.asarray(indptr)[:-1], e - 1)
+    rmax = np.where(deg > 0, np.maximum.reduceat(bias_np, starts), 0.0)
+    rmin = np.where(deg > 0, np.minimum.reduceat(bias_np, starts), 0.0)
+    rsum = np.where(deg > 0, np.add.reduceat(bias_np, starts), 0.0)
+    return rsum / np.maximum(deg, 1), rmax, rmin
+
+
+def plan_methods(
+    deg,
+    row_stats,
+    *,
+    buckets: tuple,
+    use_chunked: bool,
+    override: Optional[str] = None,
+) -> tuple:
+    """The cost model: one method per degree cohort (host numpy, float64)."""
+    n = len(buckets) + (1 if use_chunked else 0)
+    if override in ("its", "alias", "rejection"):
+        return (override,) * n
+    rmean, rmax, rmin = row_stats
+    methods = []
+    for i, seg in enumerate(buckets):
+        lo = 0 if i == 0 else buckets[i - 1]
+        absorb = i == len(buckets) - 1 and not use_chunked
+        rows = (deg > lo) & ((deg <= seg) | absorb)
+        methods.append(_pick(rows, rmean, rmax, rmin))
+    if use_chunked:
+        rows = deg > buckets[-1]
+        methods.append(_pick(rows, rmean, rmax, rmin))
+    return tuple(methods)
+
+
+def _pick(rows, rmean, rmax, rmin) -> str:
+    live = rows & (rmax > 0.0)
+    if not live.any():
+        return "its"
+    if (rmin[live] <= 0.0).any():
+        return "alias"
+    uniformity = float(np.mean(rmean[live] / rmax[live]))
+    return "rejection" if uniformity >= REJECTION_UNIFORMITY else "alias"
+
+
+def plan_for_graph(
+    graph,
+    bias_fn,
+    flat_bias=None,
+    *,
+    buckets: tuple,
+    use_chunked: bool,
+    override: Optional[str] = None,
+) -> tuple:
+    """Plan methods for (graph, flat-bias fn) and build/reuse its tables.
+
+    Returns ``(methods, MethodTables)``.  Cached per
+    ``(id(graph.indices), bias_fn)`` — the algorithm constructors use
+    module-level bias fns, so every ``deepwalk()`` spec on the same graph
+    hits the same entry.  ``flat_bias`` optionally supplies the
+    already-evaluated concrete ``(E,)`` bias (the OOM drain evaluates it per
+    partition anyway); otherwise ``bias_fn(graph)`` is evaluated eagerly.
+    ``override="its"`` short-circuits: no stats, no tables.
+    """
+    n = len(buckets) + (1 if use_chunked else 0)
+    if override == "its":
+        return ("its",) * n, EMPTY_TABLES
+    key = (id(graph.indices), bias_fn)
+    entry = _PLAN_CACHE.get(key)
+    if entry is None:
+        fb = bias_fn(graph) if flat_bias is None else flat_bias
+        bias_np = np.maximum(np.asarray(fb, dtype=np.float64), 0.0)
+        deg = np.diff(np.asarray(graph.indptr)).astype(np.int64)
+        entry = _PlanEntry(graph.indices, bias_fn, bias_np, deg)
+        _PLAN_CACHE[key] = entry
+        while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+            _PLAN_CACHE.popitem(last=False)
+    else:
+        _PLAN_CACHE.move_to_end(key)
+    indptr = np.asarray(graph.indptr)
+    plan_key = (tuple(buckets), bool(use_chunked), override)
+    methods = entry.plans.get(plan_key)
+    if methods is None:
+        methods = plan_methods(
+            entry.deg,
+            entry.row_stats(indptr),
+            buckets=tuple(buckets),
+            use_chunked=use_chunked,
+            override=override,
+        )
+        entry.plans[plan_key] = methods
+    if is_trivial(methods):
+        return methods, EMPTY_TABLES
+    return methods, entry.tables(methods, indptr)
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+
+
+def describe_plan(methods: tuple, buckets: tuple, use_chunked: bool) -> dict:
+    """JSON-friendly per-cohort view for BENCH_walk.json."""
+    out = {}
+    for i, seg in enumerate(buckets):
+        lo = 0 if i == 0 else buckets[i - 1]
+        out[f"deg({lo},{seg}]"] = methods[i]
+    if use_chunked:
+        out[f"deg>{buckets[-1]}"] = methods[len(buckets)]
+    return out

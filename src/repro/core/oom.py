@@ -55,6 +55,8 @@ import numpy as np
 from repro.core.api import SamplingSpec
 from repro.core import backend as bk
 from repro.core import frontier
+from repro.core import methods as mt
+from repro.core import select as sel
 from repro.core import transition as tp
 from repro.core.engine import (
     _edge_ctx,
@@ -100,6 +102,10 @@ class ResidentPartition(NamedTuple):
     # bucket seg -> padded (indices, bias-or-weights) arrays; bias in flat
     # mode, edge weights in window mode (the dynamic hook reads them)
     padded: Optional[dict]
+    # adaptive-selection tables (DESIGN.md §13), partition-local layout:
+    # alias prob/redirects over the padded edge axis, rejection envelopes
+    # over the padded row axis.  EMPTY for its-only plans and non-flat modes.
+    tables: mt.MethodTables = mt.EMPTY_TABLES
 
 
 class TransferEngine:
@@ -188,6 +194,7 @@ def _plan(counts, *, workload_aware: bool, balance: bool, num_streams: int, chun
     static_argnames=(
         "spec", "max_degree", "flat_max_degree", "depth", "chunk", "n_chunks",
         "be", "batched", "mode", "buckets", "use_chunked", "range_size",
+        "methods",
     ),
     # the host never reuses the pre-call queues/walks — donate them so XLA
     # updates in place instead of copying both buffers every call (a no-op
@@ -215,6 +222,7 @@ def _drain(
     buckets: tuple,
     use_chunked: bool,
     range_size: int,
+    methods: tuple = (),
 ):
     """Drain up to ``budget`` entries of queue ``pid``: one ``lax.scan`` over
     ``n_chunks`` fixed-size chunks.  Each chunk pops, takes one walk step for
@@ -243,6 +251,7 @@ def _drain(
                 buckets=buckets, use_chunked=use_chunked,
                 max_degree=flat_max_degree, row_of=dev.localize,
                 program=program, home=home,
+                methods=methods or None, tables=part.tables,
             )
         elif mode == "window":
             nxt = walk_window_transition(
@@ -397,11 +406,66 @@ def oom_random_walk(
     pad_v = pm.range_size
     pad_e = max(p.num_edges for p in partitions)
 
+    # Adaptive selection planning (DESIGN.md §13): gather per-row bias stats
+    # in a host pre-pass over the partition-LOCAL biases (non-resident
+    # neighbors read degree 0 through the phantom row — §V semantics, so the
+    # plan reflects what the drain will actually sample from), aggregate
+    # them, and plan ONE methods tuple for all partitions — a per-partition
+    # plan would fork the single shared drain trace.  Tables are built
+    # lazily on first fetch and memoized by pid, so re-residencies after LRU
+    # eviction never pay the O(E_P) alias build again.
+    methods: tuple = ()
+    fb_memo: dict[int, np.ndarray] = {}
+    tables_memo: dict[int, mt.MethodTables] = {}
+    if mode == "flat" and program.method != "its":
+        n_cohorts = len(buckets) + (1 if use_chunked else 0)
+        if program.method in ("alias", "rejection"):
+            methods = (program.method,) * n_cohorts
+        else:
+            parts_stats = []
+            for p in partitions:
+                pdev = p.to_local_device_csr(pad_vertices=pad_v, pad_edges=pad_e)
+                fb_np = np.maximum(
+                    np.asarray(program.bias.fn(pdev.graph), dtype=np.float64), 0.0
+                )
+                fb_memo[p.pid] = fb_np
+                ip = np.asarray(pdev.graph.indptr)
+                deg = np.diff(ip).astype(np.int64)
+                parts_stats.append((deg,) + mt.row_stats(ip, fb_np, deg))
+            deg_all, mean_all, max_all, min_all = (
+                np.concatenate(cols) for cols in zip(*parts_stats)
+            )
+            methods = mt.plan_methods(
+                deg_all, (mean_all, max_all, min_all),
+                buckets=buckets, use_chunked=use_chunked,
+            )
+        if mt.is_trivial(methods):
+            methods = ()
+            fb_memo.clear()
+
     def materialize(part: RangePartition) -> ResidentPartition:
         dev = part.to_local_device_csr(pad_vertices=pad_v, pad_edges=pad_e)
         if mode == "flat":
             fb = program.bias.fn(dev.graph)
-            return ResidentPartition(dev, fb, bk.pad_walk_csr(dev.indices_global, fb, buckets))
+            tables = mt.EMPTY_TABLES
+            if methods:
+                tables = tables_memo.get(part.pid)
+                if tables is None:
+                    fb_np = fb_memo.pop(part.pid, None)
+                    if fb_np is None:  # forced override: no stats pre-pass ran
+                        fb_np = np.maximum(np.asarray(fb, dtype=np.float64), 0.0)
+                    ip = np.asarray(dev.graph.indptr)
+                    prob = alias = row_max = None
+                    if any(m == "alias" for m in methods):
+                        pr, al = sel.build_alias(ip, fb_np)
+                        prob, alias = jnp.asarray(pr), jnp.asarray(al)
+                    if any(m == "rejection" for m in methods):
+                        row_max = jnp.asarray(sel.build_row_max(ip, fb_np))
+                    tables = mt.MethodTables(prob=prob, alias=alias, row_max=row_max)
+                    tables_memo[part.pid] = tables
+            return ResidentPartition(
+                dev, fb, bk.pad_walk_csr(dev.indices_global, fb, buckets), tables
+            )
         if mode == "window":
             # the dynamic hook reads edge weights off the gathered windows
             return ResidentPartition(
@@ -419,7 +483,7 @@ def oom_random_walk(
         spec=spec, max_degree=max_degree, flat_max_degree=flat_md, depth=depth,
         chunk=width, n_chunks=-(-num_streams * chunk // width), be=be,
         batched=batched, mode=mode, buckets=buckets, use_chunked=use_chunked,
-        range_size=pm.range_size,
+        range_size=pm.range_size, methods=methods,
     )
 
     call_idx = 0

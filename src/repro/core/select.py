@@ -24,10 +24,17 @@ from typing import Literal, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 SelectMethod = Literal["its_brs", "repeated", "updated", "gumbel"]
 
 _EPS = 1e-12
+
+#: Rejection-sampling retry budget per walk step (counted-RNG rounds).  Under
+#: the cost model's near-uniform guard (acceptance rate >= 0.75) the chance of
+#: exhausting all rounds is <= 0.25**8 ~ 1.5e-5; exhaustion falls back to the
+#: last candidate (still a real neighbor) rather than killing the walker.
+REJECT_ITERS = 8
 
 
 def build_ctps(biases: jax.Array, mask: jax.Array | None = None) -> jax.Array:
@@ -70,6 +77,10 @@ class SelectResult(NamedTuple):
     valid: jax.Array  # (..., k) bool
     iters: jax.Array  # (...,) int32 — retry-loop trip count (paper Fig. 11)
     searches: jax.Array  # (...,) int32 — total CTPS searches (paper Fig. 12)
+    #: True when the dispatcher silently served a pallas request from the
+    #: reference path (method without a kernel) — observability for the
+    #: adaptive method auto-pick (DESIGN.md §13).
+    fell_back: bool = False
 
 
 def _dedup_priority(cand: jax.Array, active: jax.Array) -> jax.Array:
@@ -379,3 +390,173 @@ def walk_transition_chunked_window(
     _, found = jax.lax.fori_loop(0, max_iters, p2_body, (cum0, found0))
     found = jnp.where((found < 0) & (deg > 0) & (total > 0), deg - 1, found)
     return jnp.where((deg > 0) & (total > 0), found, -1)
+
+
+# ---------------------------------------------------------------------------
+# Alias tables (Vose) and rejection sampling — the adaptive selection
+# runtime's O(1) draw methods (DESIGN.md §13).  Construction is host-side
+# numpy (once per (graph, FlatBias)); draws are pure jnp, shared verbatim by
+# the reference backend and the Pallas kernels' tails, and mirrored exactly
+# (same f32 arithmetic) by the kernels themselves.
+# ---------------------------------------------------------------------------
+
+
+def build_alias(indptr, bias) -> tuple[np.ndarray, np.ndarray]:
+    """Per-row alias tables over a flat CSR bias array (Vose's method).
+
+    Vectorized over rows grouped by exact degree: each group forms an
+    ``(R, d)`` matrix and the small/large pairing loop retires one column per
+    iteration for every row simultaneously.  Internally float64 so the
+    probability identity ``prob[j] + sum(1 - prob[i] for alias[i] == j) ==
+    d * bias[j] / total`` holds to f32 round-off after the final cast.
+
+    Returns ``(prob, alias)``: ``prob`` float32 ``(E,)`` acceptance
+    thresholds, ``alias`` int32 ``(E,)`` row-LOCAL redirect offsets.
+    Zero-total rows get ``prob = 0`` / ``alias = -1`` (the draw reads the
+    -1 as a dead end).  Deterministic: numpy argmax first-index tie-breaks.
+    """
+    indptr = np.asarray(indptr)
+    bias = np.maximum(np.asarray(bias, dtype=np.float64), 0.0)
+    e = bias.shape[0]
+    deg = np.diff(indptr).astype(np.int64)
+    prob_out = np.zeros(e, dtype=np.float32)
+    alias_out = np.full(e, -1, dtype=np.int32)
+    for d in np.unique(deg):
+        if d <= 0:
+            continue
+        d = int(d)
+        starts = indptr[:-1][deg == d].astype(np.int64)
+        w = bias[starts[:, None] + np.arange(d)[None, :]]  # (R, d)
+        tot = w.sum(axis=1)
+        ok = tot > 0.0
+        if not ok.any():
+            continue
+        starts, w, tot = starts[ok], w[ok], tot[ok]
+        r = starts.shape[0]
+        p = w * (d / tot[:, None])  # scaled to sum d
+        alias = np.full((r, d), -1, dtype=np.int32)
+        active = np.ones((r, d), dtype=bool)
+        for _ in range(max(d - 1, 0)):
+            small = active & (p < 1.0)
+            large = active & (p >= 1.0)
+            has = small.any(axis=1) & large.any(axis=1)
+            if not has.any():
+                break
+            rows = np.nonzero(has)[0]
+            s = np.argmax(small[rows], axis=1)  # first active small
+            g = np.argmax(large[rows], axis=1)  # first active large
+            alias[rows, s] = g
+            active[rows, s] = False
+            p[rows, g] -= 1.0 - p[rows, s]
+        # leftovers (all-large or all-small residue): certain acceptance
+        lr, lc = np.nonzero(active)
+        p[lr, lc] = 1.0
+        alias[lr, lc] = lc
+        flat = (starts[:, None] + np.arange(d)[None, :]).ravel()
+        prob_out[flat] = p.astype(np.float32).ravel()
+        alias_out[flat] = alias.ravel()
+    return prob_out, alias_out
+
+
+def build_row_max(indptr, bias) -> np.ndarray:
+    """Per-vertex max bias, ``(V,)`` float32 — the rejection envelope."""
+    indptr = np.asarray(indptr)
+    bias = np.maximum(np.asarray(bias, dtype=np.float64), 0.0)
+    deg = np.diff(indptr)
+    if bias.shape[0] == 0:
+        return np.zeros(deg.shape[0], dtype=np.float32)
+    starts = np.minimum(indptr[:-1], bias.shape[0] - 1)
+    rm = np.maximum.reduceat(bias, starts)
+    return np.where(deg > 0, rm, 0.0).astype(np.float32)
+
+
+def rejection_randoms(key: jax.Array, batch_shape: tuple, iters: int = REJECT_ITERS) -> jax.Array:
+    """Pre-generated rejection budget: ``(..., iters, 2)`` uniforms.
+
+    Round ``t`` consumes ``uniform(fold_in(key, 2t))`` for the candidate
+    slot and ``uniform(fold_in(key, 2t + 1))`` for the accept test — the
+    counted-RNG contract shared by the reference draw, the Pallas kernel,
+    and the sharded drain's instance-indexed streams (change all or none).
+    """
+    if iters < 1:
+        raise ValueError(f"rejection budget needs at least one round, got iters={iters}")
+    rs = [
+        jax.random.uniform(jax.random.fold_in(key, t), tuple(batch_shape), dtype=jnp.float32)
+        for t in range(2 * iters)
+    ]
+    return jnp.stack(rs, axis=-1).reshape(tuple(batch_shape) + (iters, 2))
+
+
+def alias_draw_flat(
+    starts: jax.Array,
+    degs: jax.Array,
+    prob: jax.Array,
+    alias: jax.Array,
+    indices: jax.Array,
+    rand: jax.Array,
+    *,
+    cap: int | None = None,
+) -> jax.Array:
+    """One O(1) alias draw per walker from flat CSR-aligned tables.
+
+    ``rand`` is the SAME single uniform an ITS cohort would consume (each
+    walker lives in exactly one cohort, so the streams never collide).
+    ``cap`` truncates rows to the bucket segment exactly like the kernels'
+    2-block window does for absorbed oversized rows (understated
+    ``max_degree``): slots and alias redirects clamp into ``[0, cap)`` so
+    reference and Pallas stay bit-identical even in that degenerate case.
+    Returns next vertices (int32), -1 for dead ends (zero-total rows carry
+    ``alias = -1``).
+    """
+    deg_eff = degs if cap is None else jnp.minimum(degs, cap)
+    u = rand * deg_eff.astype(jnp.float32)
+    slot = jnp.minimum(u.astype(jnp.int32), jnp.maximum(deg_eff - 1, 0))
+    frac = u - slot.astype(jnp.float32)
+    pos = jnp.clip(starts + slot, 0, prob.shape[0] - 1)
+    a = alias[pos]
+    chosen = jnp.where(frac < prob[pos], slot, a)
+    chosen = jnp.clip(chosen, 0, jnp.maximum(deg_eff - 1, 0))
+    nxt = indices[jnp.clip(starts + chosen, 0, indices.shape[0] - 1)]
+    dead = (degs <= 0) | (a < 0)
+    return jnp.where(dead, -1, nxt).astype(jnp.int32)
+
+
+def rejection_draw_flat(
+    starts: jax.Array,
+    degs: jax.Array,
+    flat_bias: jax.Array,
+    row_max: jax.Array,
+    indices: jax.Array,
+    rej: jax.Array,
+    *,
+    cap: int | None = None,
+) -> jax.Array:
+    """Counted-RNG rejection draw per walker over flat CSR bias.
+
+    ``rej`` is the ``(..., iters, 2)`` budget from
+    :func:`rejection_randoms`; ``row_max`` is each walker's envelope (its
+    row's max bias, gathered by the caller).  Round ``t`` proposes
+    ``slot = floor(r_slot * deg)`` and accepts iff
+    ``r_acc * row_max < bias[slot]`` — first acceptance wins; an exhausted
+    budget falls back to the last candidate if it carries mass.  Static
+    unroll (iters is a compile-time constant), bit-identical to the Pallas
+    kernel's loop.
+    """
+    iters = rej.shape[-2]
+    deg_eff = degs if cap is None else jnp.minimum(degs, cap)
+    degf = deg_eff.astype(jnp.float32)
+    chosen = jnp.full(degs.shape, -1, jnp.int32)
+    done = jnp.zeros(degs.shape, bool)
+    last = jnp.zeros(degs.shape, jnp.int32)
+    last_b = jnp.zeros(degs.shape, jnp.float32)
+    for t in range(iters):
+        slot = jnp.minimum((rej[..., t, 0] * degf).astype(jnp.int32), jnp.maximum(deg_eff - 1, 0))
+        bval = flat_bias[jnp.clip(starts + slot, 0, flat_bias.shape[0] - 1)]
+        acc = rej[..., t, 1] * row_max < bval
+        chosen = jnp.where(~done & acc, slot, chosen)
+        last, last_b = slot, bval
+        done = done | acc
+    chosen = jnp.where(done, chosen, jnp.where(last_b > 0, last, -1))
+    nxt = indices[jnp.clip(starts + jnp.maximum(chosen, 0), 0, indices.shape[0] - 1)]
+    dead = (degs <= 0) | (row_max <= 0) | (chosen < 0)
+    return jnp.where(dead, -1, nxt).astype(jnp.int32)

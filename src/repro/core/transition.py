@@ -172,6 +172,20 @@ class TransitionProgram:
 
     bias: BiasSource
     epilogue: Epilogue = IdentityEpilogue()
+    #: Selection method for the per-degree-bucket scheduler (DESIGN.md §13):
+    #: ``"auto"`` lets the cost model pick per bucket (static FlatBias →
+    #: alias tables, near-uniform bias → rejection, dynamic WindowBias →
+    #: ITS); ``"its"``/``"alias"``/``"rejection"`` force one method for
+    #: every bucket.  Only the flat-bias fast path consults it — window and
+    #: opaque modes are inherently dynamic and always use ITS.
+    method: str = "auto"
+
+    def __post_init__(self):
+        if self.method not in ("auto", "its", "alias", "rejection"):
+            raise ValueError(
+                f"unknown selection method {self.method!r}; expected one of "
+                "'auto', 'its', 'alias', 'rejection'"
+            )
 
     @property
     def carries_home(self) -> bool:
@@ -200,8 +214,12 @@ def lower(spec: SamplingSpec) -> TransitionProgram:
     ``identity_update`` ⇒ :class:`OpaqueEpilogue`.  Inference cannot prove a
     hook windowable — only declarations reach the :class:`WindowBias` path.
     """
+    override = getattr(spec, "selection_method", None)
     if spec.transition is not None:
-        return spec.transition
+        prog = spec.transition
+        if override is not None and override != prog.method:
+            prog = dataclasses.replace(prog, method=override)
+        return prog
     if spec.flat_edge_bias is not None and not spec.needs_prev_neighbors:
         bias: BiasSource = FlatBias(spec.flat_edge_bias)
     else:
@@ -209,7 +227,7 @@ def lower(spec: SamplingSpec) -> TransitionProgram:
     epi: Epilogue = (
         IdentityEpilogue() if spec.update is identity_update else OpaqueEpilogue()
     )
-    return TransitionProgram(bias=bias, epilogue=epi)
+    return TransitionProgram(bias=bias, epilogue=epi, method=override or "auto")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: O(1) alias-table walk step (adaptive selection runtime).
+
+One grid step advances one walker by a single alias draw: the walker's CSR
+segment blocks of the *prebuilt* per-row alias tables (``prob``/``alias``
+from ``core.select.build_alias``) arrive by the same scalar-prefetch-driven
+2-block DMA as the ITS walk kernel, then the draw is two one-hot gathers —
+no cumsum, no O(degree) scan.  This is the static-bias (FlatBias) fast path
+the cost model picks when a graph's tables are prebuilt and reused
+(DESIGN.md §13); the serving service amortizes construction across requests.
+
+Bit-parity contract: the kernel performs exactly the arithmetic of
+``core.select.alias_draw_flat`` with ``cap = max_seg`` (f32 one-hot gathers
+are exact — a single nonzero term — and vertex ids stay below 2^24), so
+reference and Pallas backends agree bit-for-bit, including the truncation
+semantics for oversized rows absorbed into the top bucket.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.its_select import resolve_interpret
+
+
+def _alias_step_kernel(
+    starts_ref,  # scalar-prefetch (W,)
+    degs_ref,  # scalar-prefetch (W,)
+    rand_ref,  # (1,) this walker's uniform (same stream an ITS cohort uses)
+    p_lo_ref,  # (max_seg,) acceptance-threshold block containing `start`
+    p_hi_ref,  # (max_seg,) following block
+    a_lo_ref,  # (max_seg,) alias-offset blocks (row-local redirects)
+    a_hi_ref,
+    idx_lo_ref,  # (max_seg,) neighbor-id blocks
+    idx_hi_ref,
+    out_ref,  # (1,) next vertex
+    *,
+    max_seg: int,
+):
+    w = pl.program_id(0)
+    start = starts_ref[w]
+    deg = degs_ref[w]
+    deg_eff = jnp.minimum(deg, max_seg)  # absorbed oversized rows truncate
+    local = start % max_seg  # offset inside the 2-block window
+    offs = jax.lax.broadcasted_iota(jnp.int32, (2 * max_seg,), 0)
+    u = rand_ref[0] * deg_eff.astype(jnp.float32)
+    slot = jnp.minimum(u.astype(jnp.int32), jnp.maximum(deg_eff - 1, 0))
+    frac = u - slot.astype(jnp.float32)
+    oh = (offs == local + slot).astype(jnp.float32)
+    pval = jnp.sum(oh * jnp.concatenate([p_lo_ref[...], p_hi_ref[...]]))
+    aliases = jnp.concatenate([a_lo_ref[...], a_hi_ref[...]])
+    aval = jnp.sum(oh * aliases.astype(jnp.float32)).astype(jnp.int32)
+    chosen = jnp.where(frac < pval, slot, aval)
+    chosen = jnp.clip(chosen, 0, jnp.maximum(deg_eff - 1, 0))
+    ids = jnp.concatenate([idx_lo_ref[...], idx_hi_ref[...]])
+    oh2 = (offs == local + chosen).astype(jnp.float32)
+    nxt = jnp.sum(oh2 * ids.astype(jnp.float32)).astype(jnp.int32)
+    dead = (deg <= 0) | (aval < 0)  # zero-total rows carry alias = -1
+    out_ref[0] = jnp.where(dead, -1, nxt)
+
+
+@functools.partial(jax.jit, static_argnames=("max_seg", "interpret"))
+def alias_step_pallas(
+    starts: jax.Array,
+    degs: jax.Array,
+    indices: jax.Array,
+    prob: jax.Array,
+    alias: jax.Array,
+    rand: jax.Array,
+    *,
+    max_seg: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One alias-table walk step for W walkers.
+
+    starts/degs: (W,) int32 row offsets/degrees; indices/prob/alias: flat
+    CSR-aligned arrays padded to the kernel geometry (``pad_csr_for_kernel``
+    — pad values are never read for real rows); rand: (W,) uniforms.
+    Returns next vertices (W,) int32 (-1 dead end).
+    """
+    w = starts.shape[0]
+    e = indices.shape[0]
+    assert e % max_seg == 0, "pad CSR edge arrays with pad_csr_for_kernel"
+    assert prob.shape[0] == e and alias.shape[0] == e, (prob.shape, alias.shape, e)
+
+    def lo_map(i, starts_ref, degs_ref):
+        return (starts_ref[i] // max_seg,)
+
+    def hi_map(i, starts_ref, degs_ref):
+        return (starts_ref[i] // max_seg + 1,)
+
+    def per_walker(i, starts_ref, degs_ref):
+        return (i,)
+
+    kernel = functools.partial(_alias_step_kernel, max_seg=max_seg)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(w,),
+        in_specs=[
+            pl.BlockSpec((1,), per_walker),
+            pl.BlockSpec((max_seg,), lo_map),
+            pl.BlockSpec((max_seg,), hi_map),
+            pl.BlockSpec((max_seg,), lo_map),
+            pl.BlockSpec((max_seg,), hi_map),
+            pl.BlockSpec((max_seg,), lo_map),
+            pl.BlockSpec((max_seg,), hi_map),
+        ],
+        out_specs=pl.BlockSpec((1,), per_walker),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.int32),
+        interpret=resolve_interpret(interpret),
+    )(starts, degs, rand, prob, prob, alias, alias, indices, indices)

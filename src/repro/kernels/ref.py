@@ -161,6 +161,81 @@ def walk_step_window_block_ref(
     return _window_pick(local, blk0, degs, mask, wts, rand, inds_p)
 
 
+def alias_step_block_ref(
+    starts: jax.Array,
+    degs: jax.Array,
+    inds_p: jax.Array,
+    prob_p: jax.Array,
+    alias_p: jax.Array,
+    rand: jax.Array,
+    *,
+    seg: int,
+) -> jax.Array:
+    """Pure-jnp mirror of one ``alias_step_pallas`` cohort (DESIGN.md §13).
+
+    ``inds_p``/``prob_p``/``alias_p`` are the SAME padded flat arrays the
+    kernel DMAs; one uniform splits into slot ``⌊u·deg⌋`` and coin, the coin
+    routes through the prebuilt redirect.  The kernel's f32 one-hot gathers
+    are exact (single nonzero term, values < 2^24), so a direct gather is
+    bit-identical."""
+    deg_eff = jnp.minimum(degs, seg)  # absorbed oversized rows truncate
+    local = starts % seg
+    blk0 = starts // seg * seg
+    u = rand * deg_eff.astype(jnp.float32)
+    slot = jnp.minimum(u.astype(jnp.int32), jnp.maximum(deg_eff - 1, 0))
+    frac = u - slot.astype(jnp.float32)
+    pos = blk0 + local + slot
+    pval = prob_p[pos]
+    aval = alias_p[pos]
+    chosen = jnp.clip(
+        jnp.where(frac < pval, slot, aval), 0, jnp.maximum(deg_eff - 1, 0)
+    )
+    nxt = inds_p[blk0 + local + chosen]
+    dead = (degs <= 0) | (aval < 0)  # zero-total rows carry alias = -1
+    return jnp.where(dead, -1, nxt).astype(jnp.int32)
+
+
+def reject_step_block_ref(
+    starts: jax.Array,
+    degs: jax.Array,
+    inds_p: jax.Array,
+    bias_p: jax.Array,
+    row_max: jax.Array,
+    rej: jax.Array,
+    *,
+    seg: int,
+) -> jax.Array:
+    """Pure-jnp mirror of one ``reject_step_pallas`` cohort (DESIGN.md §13).
+
+    ``rej`` is the (W, iters, 2) counted budget from
+    ``core.select.rejection_randoms``: round ``t`` proposes
+    ``slot = ⌊r_slot·deg⌋`` and accepts iff ``r_acc·row_max < bias[slot]``;
+    first acceptance wins, an exhausted budget keeps the last proposal
+    carrying mass — exactly the kernel's statically-unrolled loop."""
+    iters = rej.shape[1]
+    deg_eff = jnp.minimum(degs, seg)
+    degf = deg_eff.astype(jnp.float32)
+    local = starts % seg
+    blk0 = starts // seg * seg
+    chosen = jnp.full_like(starts, -1)
+    done = jnp.zeros(starts.shape, bool)
+    last = jnp.zeros_like(starts)
+    last_b = jnp.zeros(starts.shape, jnp.float32)
+    for t in range(iters):
+        slot = jnp.minimum(
+            (rej[:, t, 0] * degf).astype(jnp.int32), jnp.maximum(deg_eff - 1, 0)
+        )
+        bval = bias_p[blk0 + local + slot]
+        acc = rej[:, t, 1] * row_max < bval
+        chosen = jnp.where(~done & acc, slot, chosen)
+        last, last_b = slot, bval
+        done = done | acc
+    chosen = jnp.where(done, chosen, jnp.where(last_b > 0, last, -1))
+    nxt = inds_p[blk0 + local + jnp.maximum(chosen, 0)]
+    dead = (degs <= 0) | (row_max <= 0) | (chosen < 0)
+    return jnp.where(dead, -1, nxt).astype(jnp.int32)
+
+
 def walk_step_ref(
     starts: jax.Array,
     degs: jax.Array,

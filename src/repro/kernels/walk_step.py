@@ -93,6 +93,56 @@ def _walk_step_window_kernel(
     out_ref[0] = jnp.where(dead, -1, nxt)
 
 
+def _reject_step_kernel(
+    starts_ref,  # scalar-prefetch (W,)
+    degs_ref,  # scalar-prefetch (W,)
+    rej_ref,  # (1, 2*iters) this walker's [slot, accept] uniform rounds
+    rowmax_ref,  # (1,) this walker's rejection envelope (row max bias)
+    idx_lo_ref,  # (max_seg,) neighbor-id blocks
+    idx_hi_ref,
+    w_lo_ref,  # (max_seg,) bias blocks
+    w_hi_ref,
+    out_ref,  # (1,) next vertex
+    *,
+    max_seg: int,
+    iters: int,
+):
+    """Counted-RNG rejection walk step (adaptive selection runtime,
+    DESIGN.md §13): round ``t`` proposes ``slot = floor(r_slot * deg)`` and
+    accepts iff ``r_acc * row_max < bias[slot]`` — first acceptance wins,
+    an exhausted budget falls back to the last candidate carrying mass.
+    Static unroll; exactly ``core.select.rejection_draw_flat`` with
+    ``cap = max_seg`` (bit-identical across backends)."""
+    w = pl.program_id(0)
+    start = starts_ref[w]
+    deg = degs_ref[w]
+    deg_eff = jnp.minimum(deg, max_seg)
+    degf = deg_eff.astype(jnp.float32)
+    local = start % max_seg
+    offs = jax.lax.broadcasted_iota(jnp.int32, (2 * max_seg,), 0)
+    wts = jnp.concatenate([w_lo_ref[...], w_hi_ref[...]])
+    rm = rowmax_ref[0]
+    chosen = jnp.full((), -1, jnp.int32)
+    done = jnp.full((), False)
+    last = jnp.full((), 0, jnp.int32)
+    last_b = jnp.full((), 0.0, jnp.float32)
+    for t in range(iters):
+        slot = jnp.minimum(
+            (rej_ref[0, 2 * t] * degf).astype(jnp.int32), jnp.maximum(deg_eff - 1, 0)
+        )
+        bval = jnp.sum((offs == local + slot).astype(jnp.float32) * wts)
+        acc = rej_ref[0, 2 * t + 1] * rm < bval
+        chosen = jnp.where(~done & acc, slot, chosen)
+        last, last_b = slot, bval
+        done = done | acc
+    chosen = jnp.where(done, chosen, jnp.where(last_b > 0, last, -1))
+    ids = jnp.concatenate([idx_lo_ref[...], idx_hi_ref[...]])
+    oh = (offs == local + jnp.maximum(chosen, 0)).astype(jnp.float32)
+    nxt = jnp.sum(oh * ids.astype(jnp.float32)).astype(jnp.int32)
+    dead = (deg <= 0) | (rm <= 0) | (chosen < 0)
+    out_ref[0] = jnp.where(dead, -1, nxt)
+
+
 def pad_csr_for_kernel(indices: jax.Array, weights: jax.Array, max_seg: int):
     """Pad flat CSR edge arrays to a block multiple plus one spill block."""
     e = indices.shape[0]
@@ -211,3 +261,65 @@ def walk_step_window_pallas(
         out_shape=jax.ShapeDtypeStruct((w,), jnp.int32),
         interpret=resolve_interpret(interpret),
     )(starts, degs, rand, bias_win, indices, indices)
+
+
+@functools.partial(jax.jit, static_argnames=("max_seg", "interpret"))
+def reject_step_pallas(
+    starts: jax.Array,
+    degs: jax.Array,
+    indices: jax.Array,
+    weights: jax.Array,
+    row_max: jax.Array,
+    rej: jax.Array,
+    *,
+    max_seg: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One rejection-sampled walk step for W walkers (near-uniform biases).
+
+    starts/degs: (W,) int32 row offsets/degrees; indices/weights: flat CSR
+    arrays padded via :func:`pad_csr_for_kernel`; row_max: (W,) float32
+    per-walker envelopes (each walker's row max bias, gathered by the
+    engine); rej: (W, iters, 2) counted budget from
+    ``core.select.rejection_randoms``.  Returns next vertices (W,) int32
+    (-1 dead end).
+    """
+    w = starts.shape[0]
+    e = indices.shape[0]
+    assert e % max_seg == 0, "pad CSR edge arrays with pad_csr_for_kernel"
+    assert rej.ndim == 3 and rej.shape[0] == w and rej.shape[2] == 2, rej.shape
+    iters = rej.shape[1]
+    rej2 = rej.reshape(w, 2 * iters)
+
+    def lo_map(i, starts_ref, degs_ref):
+        return (starts_ref[i] // max_seg,)
+
+    def hi_map(i, starts_ref, degs_ref):
+        return (starts_ref[i] // max_seg + 1,)
+
+    def per_walker(i, starts_ref, degs_ref):
+        return (i,)
+
+    def rej_row(i, starts_ref, degs_ref):
+        return (i, 0)
+
+    kernel = functools.partial(_reject_step_kernel, max_seg=max_seg, iters=iters)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(w,),
+        in_specs=[
+            pl.BlockSpec((1, 2 * iters), rej_row),
+            pl.BlockSpec((1,), per_walker),
+            pl.BlockSpec((max_seg,), lo_map),
+            pl.BlockSpec((max_seg,), hi_map),
+            pl.BlockSpec((max_seg,), lo_map),
+            pl.BlockSpec((max_seg,), hi_map),
+        ],
+        out_specs=pl.BlockSpec((1,), per_walker),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.int32),
+        interpret=resolve_interpret(interpret),
+    )(starts, degs, rej2, row_max, indices, indices, weights, weights)

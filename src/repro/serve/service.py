@@ -44,7 +44,8 @@ from jax.sharding import Mesh
 
 from repro.core.api import SamplingSpec
 from repro.core import backend as bk
-from repro.core.engine import random_walk, random_walk_segments
+from repro.core import transition as tp
+from repro.core.engine import flat_method_plan, random_walk, random_walk_segments
 from repro.core.oom import oom_random_walk
 from repro.graph.csr import CSRGraph
 from repro.graph.partition import RangePartition
@@ -92,6 +93,7 @@ class ServiceStats:
     oom_launches: int = 0  # partition-scheduler passes
     sharded_launches: int = 0  # device-mesh frontier-exchange drains
     padded_walker_slots: int = 0  # launched slots minus real walkers
+    plans_prewarmed: int = 0  # explicit prewarm() selection-plan builds
 
 
 def _slice_result(req: SamplingRequest, walks: np.ndarray) -> RequestResult:
@@ -250,6 +252,26 @@ class SamplingService:
         self._queue.submit(req)  # may raise — then rid is NOT consumed
         self._next_id += 1
         return rid
+
+    def prewarm(self, spec: SamplingSpec) -> tuple:
+        """Plan ``spec``'s adaptive selection methods on this service's graph
+        and prebuild the alias/rejection tables NOW (DESIGN.md §13), so the
+        first request carrying the spec pays no build latency.
+
+        The plan and its tables live in the per-(graph, bias fn) cache of
+        ``core.methods``; the service keeps the graph alive, so every
+        subsequent request with the same spec — across drains, fused or
+        sequential, in-memory or mesh-sharded — reuses the prebuilt tables.
+        Returns the per-cohort method plan (empty when there is nothing to
+        prebuild: non-flat specs, and OOM placement, whose partition-local
+        tables are built lazily on first launch).
+        """
+        program = tp.lower(spec)
+        if self.placement == "oom" or program.mode != "flat":
+            return ()
+        methods, _tables = flat_method_plan(self.graph, program, self.max_degree)
+        self.stats.plans_prewarmed += 1
+        return methods
 
     # -- serving -----------------------------------------------------------
 

@@ -62,9 +62,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.api import EdgeCtx, SamplingSpec
 from repro.core import backend as bk
+from repro.core import methods as mt
 from repro.core import select as sel
 from repro.core import transition as tp
-from repro.core.engine import WalkResult, _degree, _edge_ctx
+from repro.core.engine import WalkResult, _degree, _edge_ctx, flat_method_plan
 from repro.distributed.sharding import shard_map_compat
 from repro.graph.csr import CSRGraph
 from repro.graph.partition import (
@@ -152,10 +153,11 @@ def _drain_block(
     mesh: Mesh, axis: str, *, spec: SamplingSpec, be: str, num_devices: int,
     num_inst: int, depth: int, cap: int, slots: int, prow_w: int,
     buckets: tuple, use_chunked: bool, rounds: int, range_size: int,
+    methods: tuple = (),
 ):
     """Build (or fetch) the jitted shard_map drain for one static config."""
     cfg = (mesh, axis, spec, be, num_devices, num_inst, depth, cap, slots,
-           prow_w, buckets, use_chunked, rounds, range_size)
+           prow_w, buckets, use_chunked, rounds, range_size, methods)
     if cfg in _DRAIN_CACHE:
         return _DRAIN_CACHE[cfg]
     while len(_DRAIN_CACHE) >= _DRAIN_CACHE_MAX:
@@ -167,11 +169,21 @@ def _drain_block(
     nfields = 5 if needs_prev else 4
     num_dest = num_devices
 
-    def body(indptr, iloc, iglob, wts, bias, vlo,
+    use_alias = any(m == "alias" for m in methods)
+    use_rej = any(m == "rejection" for m in methods)
+
+    def body(indptr, iloc, iglob, wts, bias, vlo, prob, alias, rowmax,
              qfields, qcount, qdropped, dfields, dcount,
              walks, key, seeds, limits):
         indptr, iloc, iglob, wts, bias, vlo0 = (
             indptr[0], iloc[0], iglob[0], wts[0], bias[0], vlo[0]
+        )
+        # partition-local slices of the full-graph method tables; None'd out
+        # when the plan never reads them, exactly like the engine's pytree
+        tbl = mt.MethodTables(
+            prob=prob[0] if use_alias else None,
+            alias=alias[0] if use_alias else None,
+            row_max=rowmax[0] if use_rej else None,
         )
         qfields = tuple(f[0] for f in qfields)
         dfields = tuple(f[0] for f in dfields)
@@ -207,7 +219,35 @@ def _drain_block(
 
             r0 = _per_entry(key, d, inst, valid, u_draw)
             tail = _per_entry(key, d, inst, valid, tail_draw) if use_chunked else None
-            if mode == "flat":
+            if mode == "flat" and methods:
+                # adaptive selection (DESIGN.md §13): the plan was computed
+                # from the SAME full-graph bias as the in-memory engine, so
+                # supplying the engine's counted streams (instance-indexed)
+                # keeps the sharded walk bit-identical per method
+                rej = None
+                if use_rej:
+                    def rej_draw(c):
+                        def drawfn(kd):  # fold_in(kstep,1) -> fold_in(·,2) -> c
+                            return jax.random.uniform(
+                                jax.random.fold_in(jax.random.fold_in(
+                                    jax.random.fold_in(kd, 1), 2), c),
+                                (num_inst,), dtype=jnp.float32)
+                        return drawfn
+
+                    cols = [
+                        _per_entry(key, d, inst, valid, rej_draw(c))
+                        for c in range(2 * sel.REJECT_ITERS)
+                    ]
+                    rej = jnp.stack(cols, axis=-1).reshape(
+                        cols[0].shape + (sel.REJECT_ITERS, 2)
+                    )
+                u = bk.walk_step_adaptive(
+                    key, indptr, iglob, bias, padded, curq,
+                    buckets=buckets, use_chunked=use_chunked,
+                    methods=methods, tables=tbl, backend=be,
+                    rand=r0, tail_rand=tail, rej_rand=rej,
+                )
+            elif mode == "flat":
                 if be == "pallas":
                     u = bk.walk_step_bucketed(
                         key, indptr, iglob, bias, padded, curq,
@@ -313,6 +353,7 @@ def _drain_block(
     rep = P()
     in_specs = (
         dshard, dshard, dshard, dshard, dshard, dshard,  # graph arrays
+        dshard, dshard, dshard,                          # method tables
         (dshard,) * nfields, dshard, dshard,             # queue
         (dshard,) * nfields, dshard,                     # deferred
         rep, rep, rep, rep,                              # walks, key, seeds, limits
@@ -447,6 +488,34 @@ def sharded_random_walk(
     else:
         bias_s = jnp.stack([d.graph.weights for d in devs])
 
+    # -- adaptive selection plan (DESIGN.md §13): planned from the SAME
+    # full-graph bias as the in-memory engine (same cache entry), so the
+    # method per cohort — and therefore every drawn bit — matches
+    # single-device random_walk exactly.  Tables are sliced per shard the
+    # way the bias is: alias redirects are row-local (row slicing preserves
+    # them) and the lead padding keeps global block alignment.
+    sel_methods: tuple = ()
+    tables_full = mt.EMPTY_TABLES
+    if mode == "flat":
+        sel_methods, tables_full = flat_method_plan(graph, program, max_degree)
+        if mt.is_trivial(sel_methods):
+            sel_methods = ()
+    prob_np = np.zeros((num_devices, pad_e), np.float32)
+    alias_np = np.zeros((num_devices, pad_e), np.int32)
+    rowmax_np = np.zeros((num_devices, pad_v + 1), np.float32)
+    if tables_full.prob is not None:
+        prob_full = np.asarray(tables_full.prob)
+        alias_full = np.asarray(tables_full.alias)
+        for i, p in enumerate(parts):
+            lead = p.edge_lo % seg_big
+            sl = slice(lead, lead + p.num_edges)
+            prob_np[i, sl] = prob_full[p.edge_lo : p.edge_lo + p.num_edges]
+            alias_np[i, sl] = alias_full[p.edge_lo : p.edge_lo + p.num_edges]
+    if tables_full.row_max is not None:
+        rm_full = np.asarray(tables_full.row_max)
+        for i, p in enumerate(parts):
+            rowmax_np[i, : p.num_vertices] = rm_full[p.vertex_lo : p.vertex_hi]
+
     shardspec = NamedSharding(mesh, P(axis))
     rep = NamedSharding(mesh, P())
     put_s = functools.partial(jax.device_put, device=shardspec)
@@ -456,6 +525,9 @@ def sharded_random_walk(
     wts_s = put_s(jnp.stack([d.graph.weights for d in devs]))
     bias_s = put_s(bias_s)
     vlo_s = put_s(jnp.asarray([p.vertex_lo for p in parts], jnp.int32))
+    prob_s = put_s(jnp.asarray(prob_np))
+    alias_s = put_s(jnp.asarray(alias_np))
+    rowmax_s = put_s(jnp.asarray(rowmax_np))
 
     walks0 = np.full((num_inst, depth + 1), -1, np.int32)
     walks0[:, 0] = seeds_np
@@ -510,13 +582,14 @@ def sharded_random_walk(
         mesh, axis, spec=spec, be=be, num_devices=num_devices,
         num_inst=num_inst, depth=depth, cap=cap, slots=slots, prow_w=prow_w,
         buckets=buckets, use_chunked=use_chunked, rounds=max(rounds, 1),
-        range_size=pm.range_size,
+        range_size=pm.range_size, methods=sel_methods,
     )
 
     blocks = 0
     while True:
         qfields, qcount, qdropped, dfields, dcount, walks, live = drain(
             indptr_s, iloc_s, iglob_s, wts_s, bias_s, vlo_s,
+            prob_s, alias_s, rowmax_s,
             qfields, qcount, qdropped, dfields, dcount,
             walks, key, seeds_d, limits_d,
         )
