@@ -59,6 +59,7 @@ from repro.shard import sharded_random_walk
 
 n = %d
 g = powerlaw_graph(%d, exponent=2.1, seed=7, weighted=True)  # 50000 = BENCH_GRAPHS["pl50k"]
+hub_bytes = %s  # None = default degree-aware hub budget, 0 = hubs off
 mesh = jax.make_mesh((n,), ("data",))
 key = jax.random.PRNGKey(0)
 seeds = jax.random.randint(key, (2048,), 0, g.num_vertices)
@@ -74,15 +75,22 @@ pad_e = max((p.edge_lo %% seg_big) + p.num_edges for p in parts)
 # flat bias (the benchmarked spec is flat-bias; window mode ships 3)
 bytes_per_device = 4 * ((pm.range_size + 2) + 4 * pad_e)
 run = lambda: sharded_random_walk(mesh, g, seeds, key, depth=32,
-                                  spec=alg.biased_random_walk(), max_degree=md)
+                                  spec=alg.biased_random_walk(), max_degree=md,
+                                  hub_bytes=hub_bytes)
 jax.block_until_ready(run().walks)  # compile + first drain
 t0 = time.perf_counter()
 res = run()
 jax.block_until_ready(res.walks)
 secs = time.perf_counter() - t0
+st = res.stats or {}
 print(json.dumps({"devices": n, "secs": secs, "edges": int(res.sampled_edges),
                   "bytes_per_device": int(bytes_per_device),
-                  "local_edges_max": int(pad_e), "total_edges": int(g.num_edges)}))
+                  "local_edges_max": int(pad_e), "total_edges": int(g.num_edges),
+                  "exchanged_entries": int(st.get("exchanged_entries", 0)),
+                  "exchange_bytes": int(st.get("exchange_bytes", 0)),
+                  "hub_hops": int(st.get("hub_hops", 0)),
+                  "num_hubs": int(st.get("num_hubs", 0)),
+                  "hub_replicated_edges": int(st.get("hub_replicated_edges", 0))}))
 """
 
 
@@ -106,12 +114,12 @@ def run() -> list[str]:
 
     results = []
     for n in (1, 2, 4, 8):
-        d = _child(_CHILD_SHARDED % (max(n, 1), n, 50000))
+        d = _child(_CHILD_SHARDED % (max(n, 1), n, 50000, "None"))
         rows.append(row(
             f"fig17/sharded_devices={n}", d["secs"] * 1e6,
             f"SEPS={d['edges']/d['secs']:.3e};"
             f"MB_per_dev={d['bytes_per_device']/1e6:.1f};"
-            f"local_edges={d['local_edges_max']}/{d['total_edges']}",
+            f"exch_MB={d['exchange_bytes']/1e6:.2f};hubs={d['num_hubs']}",
         ))
         results.append({
             "devices": n,
@@ -120,6 +128,34 @@ def run() -> list[str]:
             "bytes_per_device": d["bytes_per_device"],
             "local_edges_max": d["local_edges_max"],
             "total_edges": d["total_edges"],
+            "exchanged_entries": d["exchanged_entries"],
+            "exchange_bytes": d["exchange_bytes"],
+            "hub_hops": d["hub_hops"],
+            "num_hubs": d["num_hubs"],
+            "hub_replicated_edges": d["hub_replicated_edges"],
+        })
+
+    # the tentpole's transfer-volume claim, isolated: same drain with the hub
+    # region disabled (hub_bytes=0) — exchange bytes must be measurably
+    # higher without replication at the shard counts where it matters
+    hub_replication = []
+    for n in (4, 8):
+        d0 = _child(_CHILD_SHARDED % (n, n, 50000, "0"))
+        dh = next(r for r in results if r["devices"] == n)
+        rows.append(row(
+            f"fig17/hub_ablation D={n}", d0["secs"] * 1e6,
+            f"exch_MB_nohubs={d0['exchange_bytes']/1e6:.2f};"
+            f"exch_MB_hubs={dh['exchange_bytes']/1e6:.2f}",
+        ))
+        hub_replication.append({
+            "devices": n,
+            "exchange_bytes_hubs": dh["exchange_bytes"],
+            "exchange_bytes_nohubs": d0["exchange_bytes"],
+            "exchanged_entries_hubs": dh["exchanged_entries"],
+            "exchanged_entries_nohubs": d0["exchanged_entries"],
+            "hub_hops": dh["hub_hops"],
+            "num_hubs": dh["num_hubs"],
+            "seconds_nohubs": d0["secs"],
         })
 
     # the distinguishing experiment for "step cost ∝ shard size": hold E/D
@@ -129,7 +165,7 @@ def run() -> list[str]:
     # (the replicated-psum design's per-step cost grows with full V instead).
     const_shard = []
     for v, n in ((12500, 1), (25000, 2), (50000, 4), (100000, 8)):
-        d = _child(_CHILD_SHARDED % (max(n, 1), n, v))
+        d = _child(_CHILD_SHARDED % (max(n, 1), n, v, "None"))
         per_shard = d["secs"] / n
         rows.append(row(
             f"fig17/const_shard V={v} D={n}", d["secs"] * 1e6,
@@ -154,13 +190,97 @@ def run() -> list[str]:
                 "it sits lower) — scan-step cost tracks shard size, not "
                 "full-graph size",
         "results": results,
+        "hub_replication": hub_replication,
         "constant_shard_scaling": const_shard,
     }
+    problems = check(payload)
+    if problems:
+        raise RuntimeError("scaling gate failed on fresh run:\n" + "\n".join(problems))
     OUT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     return rows
 
 
+#: constant-shard seconds/shard may drift this far above the D=2 point before
+#: the gate trips (ISSUE: per-shard drain cost must stay flat as the full
+#: graph grows ~10x with E/D held constant).  Forced host devices time-slice
+#: the same physical cores, so D=8 pays real contention even when the
+#: per-shard work is constant — 2.0x tolerates that while still catching a
+#: cost term that scales with full-graph size (which would show ~4x here).
+CONST_SHARD_TOL = 2.0
+#: device-sweep bytes_per_device must fall at least this much per doubling —
+#: THE scaling claim of the device sweep (see the payload note: wall time on
+#: forced host devices is not a multi-chip throughput claim).  Pure range
+#: sharding gives ~0.50x; the replicated hub region rides on top, but its
+#: default budget also halves with D, so 0.65x leaves honest headroom.
+BYTES_STEP_TOL = 0.65
+#: device-sweep sampled_edges/s cliff-guard.  Host devices share cores, so
+#: SEPS structurally falls with D (both the pre- and post-hub data sit near
+#: 0.35-0.50x per doubling); this bound only catches a collapse — e.g. a
+#: per-round cost blowup like an always-on collective — not timing noise.
+SEPS_STEP_TOL = 0.25
+
+
+def check(payload: dict) -> list[str]:
+    """The BENCH_shard.json flatness gate (run via ``--check-only`` in CI).
+
+    Returns a list of human-readable violations (empty = pass):
+
+    - constant-shard ``seconds_per_shard`` within ``CONST_SHARD_TOL`` of the
+      D=2 point for every D >= 2 (step cost tracks shard size, not full-V);
+    - device-sweep ``bytes_per_device`` falls to at most ``BYTES_STEP_TOL``
+      per doubling (per-device memory is the sweep's scaling metric);
+    - device-sweep ``sampled_edges_per_s`` keeps at least ``SEPS_STEP_TOL``
+      per doubling (cliff-guard only — host wall time is noisy by design);
+    - hub replication strictly reduces exchange bytes at D=4/8.
+    """
+    problems: list[str] = []
+    cs = {r["devices"]: r["seconds_per_shard"] for r in payload["constant_shard_scaling"]}
+    base = cs.get(2)
+    if base is None:
+        problems.append("constant_shard_scaling has no D=2 baseline")
+    else:
+        for dv in sorted(d for d in cs if d >= 2):
+            if cs[dv] > CONST_SHARD_TOL * base:
+                problems.append(
+                    f"const-shard D={dv}: {cs[dv]:.3f}s/shard exceeds "
+                    f"{CONST_SHARD_TOL}x the D=2 baseline ({base:.3f}s)"
+                )
+    seps = {r["devices"]: r["sampled_edges_per_s"] for r in payload["results"]}
+    bpd = {r["devices"]: r["bytes_per_device"] for r in payload["results"]}
+    chain = sorted(d for d in seps if d >= 2)
+    for lo, hi in zip(chain, chain[1:]):
+        if bpd[hi] > BYTES_STEP_TOL * bpd[lo]:
+            problems.append(
+                f"device sweep D={lo}->{hi}: bytes_per_device fell only "
+                f"{bpd[lo]} -> {bpd[hi]} (> {BYTES_STEP_TOL}x retained per "
+                f"doubling — shards are not shrinking with the mesh)"
+            )
+        if seps[hi] < SEPS_STEP_TOL * seps[lo]:
+            problems.append(
+                f"device sweep D={lo}->{hi}: sampled_edges/s fell "
+                f"{seps[lo]:.3e} -> {seps[hi]:.3e} "
+                f"(> {1 - SEPS_STEP_TOL:.0%} drop per doubling)"
+            )
+    for h in payload.get("hub_replication", ()):
+        if h["exchange_bytes_hubs"] >= h["exchange_bytes_nohubs"]:
+            problems.append(
+                f"hub ablation D={h['devices']}: replication did not reduce "
+                f"exchange bytes ({h['exchange_bytes_hubs']} >= "
+                f"{h['exchange_bytes_nohubs']})"
+            )
+    return problems
+
+
 def main() -> None:
+    if "--check-only" in sys.argv:
+        payload = json.loads(OUT_PATH.read_text())
+        problems = check(payload)
+        for p in problems:
+            print(f"FAIL: {p}")
+        if problems:
+            sys.exit(1)
+        print(f"scaling gate OK ({OUT_PATH.name})")
+        return
     for r in run():
         print(r)
     print(f"wrote {OUT_PATH}")

@@ -533,7 +533,7 @@ def walk_step_bucketed_window(
     per bucket, each walker's *compact* ``(W, seg)`` row window is gathered
     from the padded CSR arrays (``padded[seg] = (ids, weights)``,
     :func:`pad_walk_csr` over edge WEIGHTS, not a flat bias) and
-    ``bias_of(u, w, mask) -> biases`` is evaluated on it — the narrowest
+    ``bias_of(u, w, mask, eidx) -> biases`` is evaluated on it — the narrowest
     arrays the hook (and its prev-membership search) can see.  The computed
     bias is then re-aligned into the kernel's block-aligned ``(W, 2·seg)``
     window (one cheap row-local gather; per-edge bias values are unchanged)
@@ -576,7 +576,10 @@ def walk_step_bucketed_window(
         ceidx = st[..., None] + offs_c
         u_c = jnp.where(cmask, inds_p[ceidx], -1)
         w_c = jnp.where(cmask, wts_p[ceidx], 0.0)
-        bias_c = jnp.where(cmask, jnp.maximum(bias_of(u_c, w_c, cmask), 0.0), 0.0)
+        # the hook also receives the window's edge positions (``ceidx``) so
+        # per-edge side lanes (the sharded drain's replicated degree lane)
+        # can be gathered without row lookups; in-memory hooks ignore it
+        bias_c = jnp.where(cmask, jnp.maximum(bias_of(u_c, w_c, cmask, ceidx), 0.0), 0.0)
         # re-align to the kernel's 2-block window at offset start % seg
         # (same geometry the reference pick uses — shared helper keeps the
         # bit-parity contract in one place)

@@ -21,7 +21,7 @@ one shared post-select step; only opaque programs keep the dense gather.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -197,11 +197,15 @@ def _window_bias_fn(graph: CSRGraph, program: tp.TransitionProgram,
     """Close the spec's dynamic edge-bias hook over the walker state so the
     backend scheduler can evaluate it on any gathered edge window.
 
-    The returned ``bias_of(u, w, mask)`` builds a window EdgeCtx — candidate
-    ids/weights straight off the CSR window, degrees by row lookup
-    (localized in partition mode, so non-resident neighbors read deg 0 off
-    the phantom row, §V semantics), prev-membership by binary search — and
-    runs ``WindowBias.fn`` on it.
+    The returned ``bias_of(u, w, mask, eidx=None)`` builds a window
+    EdgeCtx — candidate ids/weights straight off the CSR window, degrees by
+    row lookup (localized in partition mode, so non-resident neighbors read
+    deg 0 off the phantom row, §V semantics), prev-membership by binary
+    search — and runs ``WindowBias.fn`` on it.  ``eidx`` (the window's edge
+    positions in the caller's CSR edge arrays) is accepted for signature
+    compatibility with the sharded drain's carried-state hook
+    (``shard.walk._carried_window_bias`` resolves ``deg_u`` through a
+    per-edge degree lane instead of row lookups) and ignored here.
     """
     wb = program.bias
     assert isinstance(wb, tp.WindowBias), wb
@@ -213,7 +217,8 @@ def _window_bias_fn(graph: CSRGraph, program: tp.TransitionProgram,
     bound = int(ids_sorted.shape[0]) if max_degree is None else max(max_degree, 1)
     bs_steps = min(32, max(1, bound.bit_length()))
 
-    def bias_of(u, w, mask):
+    def bias_of(u, w, mask, eidx=None):
+        del eidx  # in-memory/OOM: degrees come from row lookups below
         if wb.needs_deg_u:
             uq = u if row_of is None else row_of(u)
             deg_u = jnp.where(mask, _degree(graph, uq), 0)
@@ -285,6 +290,12 @@ class WalkResult(NamedTuple):
     walks: jax.Array  # (I, depth+1) int32, -1 after termination
     lengths: jax.Array  # (I,) realized lengths (# vertices)
     sampled_edges: jax.Array  # () total sampled edges (for SEPS)
+    #: optional host-side execution counters; only the mesh-sharded walk
+    #: fills it (exchange/hub-hit telemetry, DESIGN.md §14) — engines that
+    #: construct results inside jit leave the default None (an empty pytree
+    #: leaf, so shard_map/vmap out-specs written for the 3-field layout
+    #: keep working unchanged)
+    stats: Optional[dict] = None
 
 
 def flat_method_plan(

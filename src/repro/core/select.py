@@ -338,9 +338,10 @@ def walk_transition_chunked_window(
 ) -> jax.Array:
     """Dynamic-bias variant of :func:`walk_transition_chunked`.
 
-    The per-edge bias is not a flat array — it is ``bias_of(u, w, mask)``,
-    the transition program's window-bias hook evaluated on each ``(W, chunk)``
-    edge window (``u`` = neighbor ids from ``indices``, ``w`` = edge weights,
+    The per-edge bias is not a flat array — it is ``bias_of(u, w, mask,
+    eidx)``, the transition program's window-bias hook evaluated on each
+    ``(W, chunk)`` edge window (``u`` = neighbor ids from ``indices``, ``w``
+    = edge weights, ``eidx`` = the window's positions in the edge arrays,
     padding masked).  Both passes evaluate the (pure) hook on identical
     windows, so pass-2 crossings agree with pass-1 totals exactly.  Pure jnp,
     shared verbatim by both backends (the huge-degree tail of the bucketed
@@ -359,7 +360,7 @@ def walk_transition_chunked_window(
         eidx = jnp.where(m, start[..., None] + offs, 0)
         u = jnp.where(m, indices[eidx], -1)
         w = jnp.where(m, weights[eidx], 0.0)
-        return jnp.where(m, jnp.maximum(bias_of(u, w, m), 0.0), 0.0), m
+        return jnp.where(m, jnp.maximum(bias_of(u, w, m, eidx), 0.0), 0.0), m
 
     def p1_body(c, tot):
         def step(t):

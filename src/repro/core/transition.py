@@ -256,8 +256,7 @@ def apply_epilogue(
         return u
     if isinstance(epi, MHAcceptEpilogue):
         deg_u = _selected_deg_u(ctx, u)
-        accept_p = jnp.minimum(1.0, ctx.deg_v / jnp.maximum(deg_u, 1))
-        stay = jax.random.uniform(key, u.shape) >= accept_p
+        stay = mh_stay(jax.random.uniform(key, u.shape), ctx.deg_v, deg_u)
         return jnp.where(stay & (ctx.v >= 0) & (u >= 0), ctx.v, u)
     if isinstance(epi, TeleportEpilogue):
         kj, kv = jax.random.split(key)
@@ -276,6 +275,21 @@ def apply_epilogue(
         return jnp.where(teleport & (u >= 0), tgt, u)
     # OpaqueEpilogue — full generality through the user hook
     return spec.update(key, ctx, u)
+
+
+def mh_stay(r: jax.Array, deg_v: jax.Array, deg_u: jax.Array) -> jax.Array:
+    """The MH acceptance test, in one place: stay iff ``r >= min(1,
+    deg_v/deg_u)`` (paper Table I, MHRW).
+
+    ``deg_v``/``deg_u`` are int32 true degrees; the division promotes to
+    float32 exactly like the engine's fused epilogue, so every caller —
+    ``apply_epilogue`` here, the owner-routed sharded drain
+    (``shard/walk.py``, which resolves ``deg_u`` from its replicated hub /
+    resident-row degree lanes) — decides acceptance with bit-identical
+    arithmetic from the same counted uniform.
+    """
+    accept_p = jnp.minimum(1.0, deg_v / jnp.maximum(deg_u, 1))
+    return r >= accept_p
 
 
 def _selected_deg_u(ctx: EdgeCtx, u: jax.Array) -> jax.Array:

@@ -39,6 +39,18 @@ from repro.core.frontier import owner_compaction
 EMPTY = -1
 
 
+def entry_nbytes(widths: Sequence[int]) -> int:
+    """Wire footprint of ONE queue entry, in bytes.
+
+    ``widths`` is the queue's field-width tuple (``0`` = scalar lane,
+    ``K > 0`` = a ``(cap, K)`` payload lane such as a carried neighbor
+    row); every lane is int32.  The sharded drain multiplies this by its
+    exchanged-entry count to report ``exchange_bytes`` — the transfer-volume
+    metric C-SAW's §V argument (and the BENCH flatness gate) is about.
+    """
+    return 4 * sum(max(int(w), 1) for w in widths)
+
+
 def _fill_like(arr: jax.Array) -> jax.Array:
     return jnp.full((), EMPTY, arr.dtype)
 

@@ -1,0 +1,229 @@
+"""Shared case generators for the cross-engine property-parity harness.
+
+Three layers, so the harness degrades gracefully:
+
+- **Deterministic builders** (`GRAPH_BUILDERS`, `SPEC_BUILDERS`,
+  `build_graph` / `build_spec`): plain cached callables.  Caching matters
+  twice over — the same ``CSRGraph`` / ``SamplingSpec`` OBJECT is reused
+  across cases, so the engines' jit caches (which key on spec identity and
+  array shapes) actually hit, keeping the whole suite to a handful of
+  traces.
+- **Seed corpus** (`SEED_CORPUS`): named cases that ALWAYS run (no
+  hypothesis needed), parametrized straight into the parity tests.  The
+  graph family mirrors the BENCH configs (``powerlaw_graph`` with the
+  fig17 generator parameters, weighted, CI-scaled sizes) plus the
+  adversarial shapes: a star (one hub owns every edge — the hub-replication
+  and exchange-pressure worst case) and a ring (pure cross-shard chain).
+- **Hypothesis strategies** (`graph_cases`, `spec_cases`, `walk_cases`):
+  random (graph × spec × method override × depth × seed-set) draws over the
+  same cached builders.  Only defined when hypothesis is installed
+  (`HAS_HYPOTHESIS`); CI installs the ``[test]`` extra, so they run
+  blocking there.
+
+`REGRESSION_CASES` is the failure registry: when a property test finds a
+counterexample, pin it here (same shape as `SEED_CORPUS` entries) so it
+reruns forever as a plain parametrized case.  Seeded with the cases that
+exercised the paths the hub-replication PR moved off the replicated-psum
+fallback (MH-accept and ``needs_deg_u`` window biases).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import algorithms as alg
+from repro.core.api import SamplingSpec
+from repro.core.transition import TransitionProgram, WindowBias
+from repro.graph import csr_from_edges, powerlaw_graph
+
+try:  # pragma: no cover - exercised via HAS_HYPOTHESIS guards
+    from hypothesis import strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    st = None
+    HAS_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Graphs
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=32)
+def _powerlaw(num_vertices: int, seed: int, weighted: bool):
+    # the BENCH family: fig17_scaling.py's generator with default exponent /
+    # degree bounds, scaled down for CI
+    return powerlaw_graph(num_vertices, seed=seed, weighted=weighted)
+
+
+@functools.lru_cache(maxsize=8)
+def _star(num_vertices: int):
+    # one hub owns (almost) every edge: the worst case for owner routing —
+    # every walker funnels into the hub's shard every other step — and the
+    # best case for hub replication
+    spokes = np.arange(1, num_vertices, dtype=np.int64)
+    hub = np.zeros_like(spokes)
+    return csr_from_edges(num_vertices, hub, spokes, symmetrize=True)
+
+
+@functools.lru_cache(maxsize=8)
+def _ring(num_vertices: int):
+    # degree-2 everywhere: zero hubs, maximal cross-shard chain traffic
+    src = np.arange(num_vertices, dtype=np.int64)
+    dst = (src + 1) % num_vertices
+    return csr_from_edges(num_vertices, src, dst, symmetrize=True)
+
+
+GRAPH_BUILDERS = {
+    "pl64": lambda: _powerlaw(64, 0, False),
+    "pl130w": lambda: _powerlaw(130, 1, True),
+    "pl300w": lambda: _powerlaw(300, 3, True),
+    "star33": lambda: _star(33),
+    "star65": lambda: _star(65),
+    "ring48": lambda: _ring(48),
+}
+
+
+def build_graph(name: str):
+    return GRAPH_BUILDERS[name]()
+
+
+# ---------------------------------------------------------------------------
+# Sampling specs
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=1)
+def _degu_window_spec() -> SamplingSpec:
+    # a window bias that READS the candidate's degree — the program family
+    # that used to force the replicated-psum fallback on the sharded path
+    wb = WindowBias(
+        lambda ctx: ctx.weight / jnp.maximum(ctx.deg_u, 1), needs_deg_u=True
+    )
+    return SamplingSpec(name="degu_window", transition=TransitionProgram(bias=wb))
+
+
+_SPEC_FACTORIES = {
+    "deepwalk": alg.deepwalk,
+    "weighted": alg.weighted_random_walk,
+    "node2vec": lambda: alg.node2vec(p=2.0, q=0.5),
+    "mh": alg.metropolis_hastings_walk,
+    "restart": lambda: alg.random_walk_with_restart(0.2),
+    "degu_window": _degu_window_spec,
+}
+
+
+@functools.lru_cache(maxsize=64)
+def build_spec(name: str, method: Optional[str] = None) -> SamplingSpec:
+    """One cached spec object per (family, selection-method override)."""
+    spec = _SPEC_FACTORIES[name]()
+    if method is not None:
+        spec = dataclasses.replace(spec, selection_method=method)
+    return spec
+
+
+#: flat-bias families accept a selection-method override (DESIGN.md §13);
+#: window/epilogue families ignore it, so only combine where it's meaningful
+FLAT_SPECS = ("deepwalk", "weighted", "mh", "restart")
+SPEC_BUILDERS = tuple(_SPEC_FACTORIES)
+METHOD_OVERRIDES = (None, "its", "alias", "rejection")
+
+
+# ---------------------------------------------------------------------------
+# Cases
+# ---------------------------------------------------------------------------
+
+
+class ParityCase(NamedTuple):
+    """One concrete (graph, program, walk geometry) parity check."""
+
+    graph: str  # GRAPH_BUILDERS key
+    spec: str  # _SPEC_FACTORIES key
+    method: Optional[str]  # selection-method override (flat specs only)
+    depth: int
+    num_seeds: int
+    key_seed: int
+
+    @property
+    def label(self) -> str:
+        m = f"+{self.method}" if self.method else ""
+        return f"{self.graph}-{self.spec}{m}-d{self.depth}"
+
+
+def case_args(case: ParityCase):
+    """Materialize a case: (graph, seeds, spec, max_degree)."""
+    g = build_graph(case.graph)
+    nv = g.num_vertices
+    stride = max(nv // case.num_seeds, 1)
+    seeds = np.arange(0, nv, stride, dtype=np.int32)[: case.num_seeds]
+    spec = build_spec(case.spec, case.method)
+    md = int(np.diff(np.asarray(g.indptr)).max())
+    return g, seeds, spec, md
+
+
+#: always-run corpus: every program family on the BENCH graph family plus
+#: the adversarial shapes, with at least one method override per selection
+#: method
+SEED_CORPUS = [
+    ParityCase("pl300w", "deepwalk", None, 9, 32, 0),
+    ParityCase("pl300w", "weighted", "alias", 9, 32, 0),
+    ParityCase("pl130w", "weighted", "rejection", 7, 16, 1),
+    ParityCase("pl64", "deepwalk", "its", 5, 16, 2),
+    ParityCase("pl300w", "node2vec", None, 7, 24, 0),
+    ParityCase("pl300w", "mh", None, 9, 24, 1),
+    ParityCase("pl130w", "degu_window", None, 7, 16, 0),
+    ParityCase("pl130w", "restart", None, 7, 16, 0),
+    ParityCase("star65", "deepwalk", None, 6, 16, 0),
+    ParityCase("star33", "mh", None, 6, 11, 3),
+    ParityCase("ring48", "node2vec", None, 8, 12, 0),
+]
+
+#: pinned counterexamples from property runs (same shape as SEED_CORPUS —
+#: append here when hypothesis finds a failure, never delete).  Seeded with
+#: the programs this PR moved off the replicated-psum fallback, on the
+#: shapes most likely to break them: MH on a star (every acceptance reads
+#: the hub degree) and deg_u-window on a skewed power-law graph.
+REGRESSION_CASES = [
+    ParityCase("star33", "mh", None, 8, 16, 0),
+    ParityCase("pl300w", "degu_window", None, 9, 24, 2),
+    ParityCase("star65", "node2vec", None, 7, 16, 1),
+]
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis strategies (present only when hypothesis is installed)
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+
+    def graph_cases():
+        return st.sampled_from(sorted(GRAPH_BUILDERS))
+
+    @st.composite
+    def spec_cases(draw):
+        """(spec name, method override) — overrides only where meaningful."""
+        name = draw(st.sampled_from(SPEC_BUILDERS))
+        method = None
+        if name in FLAT_SPECS:
+            method = draw(st.sampled_from(METHOD_OVERRIDES))
+        return name, method
+
+    @st.composite
+    def walk_cases(draw):
+        """A full random ParityCase over the cached builders.
+
+        Geometry values come from small fixed menus so the engines' shape-
+        keyed jit caches are shared across examples — the point is many
+        (program × graph) combinations, not many array shapes.
+        """
+        gname = draw(graph_cases())
+        sname, method = draw(spec_cases())
+        depth = draw(st.sampled_from([1, 5, 9]))
+        num_seeds = draw(st.sampled_from([3, 16, 32]))
+        key_seed = draw(st.integers(min_value=0, max_value=3))
+        return ParityCase(gname, sname, method, depth, num_seeds, key_seed)

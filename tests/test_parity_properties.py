@@ -1,0 +1,256 @@
+"""Property-based cross-engine parity harness (DESIGN.md §12/§14).
+
+The repo's central correctness claim is that every engine realizes the SAME
+walk distribution — and for the deterministic pairs, the same *bits*:
+
+- in-memory ``reference`` ↔ ``pallas`` backends: bit-identical.
+- in-memory ↔ mesh-sharded ``sharded_random_walk``: bit-identical for every
+  non-opaque program (owner routing + hub replication + counted RNG).
+- in-memory ↔ batched ``SamplingService``: bit-identical at the service's
+  padded launch geometry (per-request keys).
+- OOM drain: NOT bit-parity with in-memory (per-launch RNG keying and §V
+  phantom-degree semantics are documented divergences) — its contracts are
+  determinism across scheduling configurations, backend bit-parity, and
+  walks-only-along-edges.
+
+Every contract runs twice here: once over the always-on ``SEED_CORPUS`` +
+``REGRESSION_CASES`` (plain parametrize — no hypothesis needed), and once
+as a hypothesis property over random (graph × spec × method × geometry)
+draws (``tests/strategies.py``), bounded by ``PARITY_EXAMPLES`` (default
+15) so CI stays fast while local runs can crank it up.  Failures found by
+the property pass get pinned into ``strategies.REGRESSION_CASES``.
+
+Multi-device sharded parity (8 host devices, both backends) lives in
+``tests/test_shard.py`` — this module runs in-process on a 1-device mesh,
+which still exercises the full drain (queues, sub-rounds, deferral, hub
+layout plumbing) minus the collective.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import random_walk
+from repro.core.oom import oom_random_walk
+from repro.core.transition import IdentityEpilogue, lower
+from repro.graph.partition import partition_by_vertex_range
+from repro.serve import SamplingService
+from repro.serve.queue import _pow2_bucket
+from repro.shard.walk import sharded_random_walk
+
+from strategies import (
+    HAS_HYPOTHESIS,
+    REGRESSION_CASES,
+    SEED_CORPUS,
+    ParityCase,
+    case_args,
+)
+
+PARITY_EXAMPLES = int(os.environ.get("PARITY_EXAMPLES", "15"))
+ALL_CASES = SEED_CORPUS + REGRESSION_CASES
+_IDS = [c.label for c in ALL_CASES]
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+# ---------------------------------------------------------------------------
+# The parity contracts, as plain functions both passes share
+# ---------------------------------------------------------------------------
+
+
+def check_backend_parity(case: ParityCase):
+    g, seeds, spec, md = case_args(case)
+    key = jax.random.PRNGKey(case.key_seed)
+    ref = random_walk(g, seeds, key, depth=case.depth, spec=spec,
+                      max_degree=md, backend="reference")
+    pal = random_walk(g, seeds, key, depth=case.depth, spec=spec,
+                      max_degree=md, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(ref.walks), np.asarray(pal.walks))
+    np.testing.assert_array_equal(np.asarray(ref.lengths), np.asarray(pal.lengths))
+
+
+def check_sharded_parity(case: ParityCase, mesh, backend="reference", **kw):
+    g, seeds, spec, md = case_args(case)
+    key = jax.random.PRNGKey(case.key_seed)
+    solo = random_walk(g, seeds, key, depth=case.depth, spec=spec,
+                       max_degree=md, backend=backend)
+    sh = sharded_random_walk(mesh, g, seeds, key, depth=case.depth, spec=spec,
+                             max_degree=md, backend=backend, **kw)
+    np.testing.assert_array_equal(np.asarray(solo.walks), np.asarray(sh.walks))
+    assert sh.stats is not None and sh.stats["num_devices"] == 1
+
+
+def check_service_parity(case: ParityCase):
+    g, seeds, spec, md = case_args(case)
+    key = jax.random.PRNGKey(case.key_seed)
+    svc = SamplingService(g, backend="reference", key=jax.random.PRNGKey(99))
+    rid = svc.submit(seeds, depth=case.depth, spec=spec, key=key)
+    res = svc.drain()[rid]
+    # the service launches at pow2-bucketed geometry with its own row
+    # padding; reproduce that launch through the plain engine
+    width = _pow2_bucket(len(seeds), svc.config.min_walker_bucket)
+    depth_b = _pow2_bucket(case.depth, svc.config.min_depth_bucket)
+    row = np.full((width,), -1, np.int32)
+    row[: len(seeds)] = seeds
+    solo = random_walk(g, jnp.asarray(row), key, depth=depth_b, spec=spec,
+                       max_degree=md, backend="reference")
+    expect = np.asarray(solo.walks)[: len(seeds), : case.depth + 1]
+    np.testing.assert_array_equal(res.walks, expect)
+
+
+def check_oom_properties(case: ParityCase, num_partitions=4):
+    """The OOM drain's documented contracts (tests/test_oom.py, DESIGN.md §8).
+
+    OOM is deliberately NOT bit-parity with the in-memory engine (per-launch
+    RNG keying, §V phantom-degree semantics), and its scheduling knobs
+    recompose launches — so across scheduling configs only the WALK SET
+    contract holds (same seeds, full coverage, edges only), while rerun- and
+    backend-determinism are exact.
+    """
+    g, seeds, spec, md = case_args(case)
+    key = jax.random.PRNGKey(case.key_seed)
+    parts = partition_by_vertex_range(g, num_partitions)
+    runs = {}
+    for tag, kw in {
+        "base": dict(batched=True, workload_aware=True),
+        "unbatched": dict(batched=False, workload_aware=True),
+        "fifo": dict(batched=True, workload_aware=False),
+    }.items():
+        walks, _ = oom_random_walk(
+            parts, g.num_vertices, seeds, key, depth=case.depth, spec=spec,
+            max_degree=md, backend="reference", **kw,
+        )
+        runs[tag] = np.asarray(walks)
+    # exact determinism: the SAME config rerun must not change a single bit
+    again, _ = oom_random_walk(
+        parts, g.num_vertices, seeds, key, depth=case.depth, spec=spec,
+        max_degree=md, backend="reference", batched=True, workload_aware=True,
+    )
+    np.testing.assert_array_equal(runs["base"], np.asarray(again))
+    # exact backend parity inside the OOM drain
+    pal, _ = oom_random_walk(
+        parts, g.num_vertices, seeds, key, depth=case.depth, spec=spec,
+        max_degree=md, backend="pallas",
+    )
+    np.testing.assert_array_equal(runs["base"], np.asarray(pal))
+    # scheduling invariance of the walk SET: same seeds column, full depth
+    # coverage, and every emitted transition is legal
+    for tag, w in runs.items():
+        np.testing.assert_array_equal(w[:, 0], seeds, err_msg=tag)
+        assert w.shape == (len(seeds), case.depth + 1), tag
+        if isinstance(lower(spec).epilogue, IdentityEpilogue):
+            assert_walks_follow_edges(g, w)
+
+
+def assert_walks_follow_edges(graph, walks: np.ndarray):
+    """Every consecutive (a, b >= 0) pair must be an edge of ``graph``.
+
+    Only meaningful for identity-epilogue programs — teleport jumps and MH
+    stays are legitimate non-edge transitions.
+    """
+    indptr = np.asarray(graph.indptr)
+    indices = np.asarray(graph.indices)
+    for row in walks:
+        for a, b in zip(row[:-1], row[1:]):
+            if a < 0 or b < 0:
+                continue
+            assert b in indices[indptr[a] : indptr[a + 1]], (a, b)
+
+
+# ---------------------------------------------------------------------------
+# Pass 1: the always-on corpus (runs with or without hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", ALL_CASES, ids=_IDS)
+def test_corpus_backend_parity(case):
+    check_backend_parity(case)
+
+
+@pytest.mark.parametrize("case", ALL_CASES, ids=_IDS)
+def test_corpus_sharded_parity(case, mesh1):
+    check_sharded_parity(case, mesh1)
+
+
+@pytest.mark.parametrize(
+    "case",
+    [c for c in ALL_CASES if c.spec in ("node2vec", "mh", "degu_window")],
+    ids=lambda c: c.label,
+)
+def test_corpus_sharded_parity_pallas(case, mesh1):
+    # the programs this PR moved off the fallback, through the pallas drain
+    check_sharded_parity(case, mesh1, backend="pallas")
+
+
+@pytest.mark.parametrize("sub_rounds", [2, 3])
+def test_corpus_sharded_parity_sub_rounds(sub_rounds, mesh1):
+    # round structure must not leak into the bits: extra local sub-rounds
+    # between collectives (the real-mesh latency knob, default 1) replay
+    # the identical counted streams
+    for case in (SEED_CORPUS[4], SEED_CORPUS[9]):  # node2vec + star MH
+        check_sharded_parity(case, mesh1, sub_rounds=sub_rounds)
+
+
+@pytest.mark.parametrize("case", SEED_CORPUS[:6], ids=[c.label for c in SEED_CORPUS[:6]])
+def test_corpus_service_parity(case):
+    check_service_parity(case)
+
+
+@pytest.mark.parametrize(
+    "case",
+    [c for c in SEED_CORPUS if c.spec in ("deepwalk", "node2vec", "mh")][:4],
+    ids=lambda c: c.label,
+)
+def test_corpus_oom_properties(case):
+    check_oom_properties(case)
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: hypothesis properties over random cases
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+    from hypothesis import HealthCheck, given, settings
+
+    from strategies import walk_cases
+
+    _SETTINGS = dict(
+        max_examples=PARITY_EXAMPLES,
+        deadline=None,
+        derandomize=True,  # CI stability; failures become REGRESSION_CASES
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+
+    @settings(**_SETTINGS)
+    @given(case=walk_cases())
+    def test_prop_backend_parity(case):
+        check_backend_parity(case)
+
+    @settings(**_SETTINGS)
+    @given(case=walk_cases())
+    def test_prop_sharded_parity(case):
+        check_sharded_parity(case, jax.make_mesh((1,), ("data",)))
+
+    @settings(**_SETTINGS)
+    @given(case=walk_cases())
+    def test_prop_service_parity(case):
+        check_service_parity(case)
+
+    @settings(max_examples=max(PARITY_EXAMPLES // 3, 3), deadline=None,
+              derandomize=True,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(case=walk_cases())
+    def test_prop_oom_properties(case):
+        check_oom_properties(case)
+
+else:  # keep the skip visible in reports instead of silently absent
+
+    def test_prop_backend_parity():
+        pytest.skip("hypothesis not installed — property pass ran corpus-only")
