@@ -18,7 +18,21 @@ Headline: fused-vs-sequential speedup per mix, plus requests/s and
 walker-steps/s throughput.  Acceptance floor (ISSUE 4): >= 1.5x on the
 mixed-spec mix.
 
+The **open-loop** section (ISSUE 10) measures the always-on
+:class:`~repro.serve.StreamingSamplingService` under Poisson arrivals: a
+pre-sampled request population (mixed specs, tiered priorities/deadlines)
+is submitted on an open-loop schedule — arrival times fixed in advance, so
+a slow server cannot slow the offered load — at three rates spanning
+under- to near-saturation of a launch-per-request server (the capacity
+proxy is one measured single-request launch).  Each rate runs twice over
+the identical population and schedule: continuous batching
+(``StreamConfig(batching=True)``) vs the launch-per-request baseline
+(``batching=False`` — same scheduler, no co-batching), reporting per-tier
+p50/p99 total latency and sustained requests/s.  Acceptance: batching
+beats the baseline on p99 at the highest rate, zero requests dropped.
+
 Usage:  PYTHONPATH=src python benchmarks/bench_serve.py [--iters 3]
+        [--open-loop-only] [--open-loop-n 150]
 (also exposed as ``run()`` rows through benchmarks/run.py)
 """
 from __future__ import annotations
@@ -30,18 +44,37 @@ import sys
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
-from benchmarks.common import BENCH_GRAPHS, row  # noqa: E402
+from benchmarks.common import BENCH_GRAPHS, row, timeit  # noqa: E402
 
 from repro.core import algorithms as alg  # noqa: E402
-from repro.serve import SamplingService, ServiceConfig  # noqa: E402
+from repro.core.engine import random_walk_segments  # noqa: E402
+from repro.serve import (  # noqa: E402
+    AdmissionError,
+    Priority,
+    SamplingService,
+    ServiceConfig,
+    StreamConfig,
+    StreamingSamplingService,
+)
+from repro.serve.stream import percentile  # noqa: E402
 
 OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
 
 GRAPH = "pl50k"
 N_REQUESTS = 64
+
+# open-loop serving geometry: one width/depth bucket so the streamed
+# cohorts reuse a handful of prewarmed traces (sizes 9..16 -> bucket 16)
+OPEN_LOOP_N = 150
+OL_DEPTH = 8
+OL_WIDTH = 16
+OL_MAX_COHORT = 16
+OL_WINDOW_MS = 10.0
+TIER_NAMES = {0: "interactive", 1: "standard", 2: "bulk"}
 
 
 def _request_mixes(g, rng):
@@ -100,10 +133,153 @@ def _bench_mode(g, requests, keys, fuse, iters):
     return times[len(times) // 2], stats
 
 
-def run(iters: int = 3):
+# ---------------------------------------------------------------------------
+# Open-loop streaming load harness (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+
+def _open_loop_population(g, rng, n):
+    """Pre-sampled request population: mixed specs within one padding
+    bucket, tiered priorities/deadlines (1-in-4 interactive at 50 ms,
+    1-in-4 bulk at 500 ms, the rest window-bound standard), explicit keys —
+    every leg and both modes serve literally identical work."""
+    specs = [alg.deepwalk(), alg.weighted_random_walk()]
+    base = jax.random.PRNGKey(23)
+    pop = []
+    for i in range(n):
+        if i % 4 == 0:
+            tier, deadline = Priority.INTERACTIVE, 50.0
+        elif i % 4 == 2:
+            tier, deadline = Priority.BULK, 500.0
+        else:
+            tier, deadline = Priority.STANDARD, None
+        pop.append((
+            specs[i % 2],
+            rng.integers(0, g.num_vertices, int(rng.integers(9, OL_WIDTH + 1))),
+            tier, deadline, jax.random.fold_in(base, i),
+        ))
+    return pop
+
+
+def _ol_service(g):
+    """A streaming-ready service: generous back-pressure ceilings (the har-
+    ness asserts zero drops) and every cohort shape prewarmed — the fused
+    trace keys on the pow2-bucketed request axis, so warm each size the
+    scheduler can form up to ``max_requests_per_launch``."""
+    svc = SamplingService(
+        g, backend="reference", key=jax.random.PRNGKey(3),
+        config=ServiceConfig(
+            max_pending_requests=1 << 15, max_pending_walkers=1 << 22,
+            max_requests_per_launch=OL_MAX_COHORT,
+        ),
+    )
+    for spec in (alg.deepwalk(), alg.weighted_random_walk()):
+        r = 1
+        while r <= OL_MAX_COHORT:
+            svc.prewarm(spec, depth=OL_DEPTH, width=OL_WIDTH, requests=r)
+            r *= 2
+    return svc
+
+
+def _single_launch_ms(g):
+    """Measured cost of one single-request launch at the serving geometry —
+    the capacity proxy the open-loop rates are set against."""
+    seeds = np.full((1, OL_WIDTH), -1, np.int32)
+    seeds[0, :12] = np.arange(12)
+    keys = jnp.stack([jax.random.PRNGKey(0)])
+    md = int(g.max_degree())
+    fn = lambda: random_walk_segments(  # noqa: E731
+        g, jnp.asarray(seeds), keys, depth=OL_DEPTH, spec=alg.deepwalk(),
+        max_degree=md, backend="reference",
+    )
+    return timeit(fn, warmup=1, iters=5) * 1e3
+
+
+def _run_open_loop_leg(g, pop, rate, batching, seed):
+    """One open-loop run: Poisson arrivals at ``rate`` req/s over ``pop``."""
+    svc = _ol_service(g)
+    stream_cfg = StreamConfig(max_batch_window_ms=OL_WINDOW_MS, batching=batching)
+    arrivals = np.cumsum(np.random.default_rng(seed).exponential(1.0 / rate, len(pop)))
+    futs, dropped = [], 0
+    with StreamingSamplingService(svc, stream_cfg) as stream:
+        t0 = time.perf_counter()
+        for (spec, seeds, tier, deadline, key), at in zip(pop, arrivals):
+            delay = t0 + at - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            try:
+                futs.append(stream.submit(
+                    seeds, depth=OL_DEPTH, spec=spec, key=key,
+                    deadline_ms=deadline, priority=tier,
+                ))
+            except AdmissionError:
+                dropped += 1
+        for f in futs:
+            f.result(timeout=600)
+        t1 = time.perf_counter()
+    lats = [f.latency for f in futs]
+    total = [l.total_ms for l in lats]
+    tiers = {}
+    for tval, tname in TIER_NAMES.items():
+        tl = [l.total_ms for l in lats if l.tier == tval]
+        if tl:
+            tiers[tname] = {
+                "n": len(tl),
+                "p50_ms": percentile(tl, 50),
+                "p99_ms": percentile(tl, 99),
+            }
+    return {
+        "mode": "batching" if batching else "per_request",
+        "offered_rps": rate,
+        "n_requests": len(pop),
+        "completed": len(futs),
+        "dropped": dropped,
+        "sustained_rps": len(futs) / (t1 - t0),
+        "launches": svc.stats.stream_launches,
+        "deadline_misses": svc.stats.stream_deadline_misses,
+        "p50_ms": percentile(total, 50),
+        "p99_ms": percentile(total, 99),
+        "tiers": tiers,
+    }
+
+
+def _open_loop_section(g, n):
+    """The open-loop sweep: 3 rates x {per_request, batching} over one
+    population; returns (section dict, CSV rows)."""
+    pop = _open_loop_population(g, np.random.default_rng(29), n)
+    single_ms = _single_launch_ms(g)
+    cap = 1e3 / single_ms  # req/s a launch-per-request server could sustain
+    legs, rows = [], []
+    for frac in (0.25, 0.6, 1.0):
+        rate = frac * cap
+        for batching in (False, True):
+            leg = _run_open_loop_leg(g, pop, rate, batching, seed=int(frac * 100))
+            leg["offered_fraction_of_capacity"] = frac
+            legs.append(leg)
+            rows.append(row(
+                f"serve_openloop_{leg['mode']}_r{int(round(rate))}",
+                leg["p99_ms"] * 1e3,
+                f"p50={leg['p50_ms']:.1f}ms;p99={leg['p99_ms']:.1f}ms;"
+                f"rps={leg['sustained_rps']:.0f};launches={leg['launches']};"
+                f"dropped={leg['dropped']}",
+            ))
+    section = {
+        "graph": GRAPH,
+        "n_requests_per_leg": n,
+        "depth": OL_DEPTH,
+        "window_ms": OL_WINDOW_MS,
+        "single_launch_ms": single_ms,
+        "capacity_proxy_rps": cap,
+        "legs": legs,
+    }
+    return section, rows
+
+
+def run(iters: int = 3, open_loop_n: int = OPEN_LOOP_N,
+        closed_loop: bool = True, open_loop: bool = True):
     g = BENCH_GRAPHS[GRAPH]()
     rng = np.random.default_rng(17)
-    mixes = _request_mixes(g, rng)
+    mixes = _request_mixes(g, rng) if closed_loop else {}
     base_key = jax.random.PRNGKey(9)
     results = []
     for mix_name, requests in mixes.items():
@@ -134,7 +310,7 @@ def run(iters: int = 3):
         yield row(f"serve_{mix_name}_sequential", seq_s * 1e6,
                   f"requests={len(requests)};launches={len(requests)}")
 
-    OUT_PATH.write_text(json.dumps({
+    payload = {
         # shared benchmark-JSON schema (DESIGN.md §9): diffable PR-over-PR
         "bench": "serve",
         "device": jax.default_backend(),
@@ -142,16 +318,30 @@ def run(iters: int = 3):
         "graph": GRAPH,
         "n_requests": N_REQUESTS,
         "results": results,
-    }, indent=2))
+    }
+    if open_loop:
+        section, ol_rows = _open_loop_section(g, open_loop_n)
+        payload["open_loop"] = section
+        for r in ol_rows:
+            yield r
+    OUT_PATH.write_text(json.dumps(payload, indent=2))
     yield row("serve_json", 0.0, str(OUT_PATH.name))
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--open-loop-n", type=int, default=OPEN_LOOP_N,
+                    help="requests per open-loop leg")
+    ap.add_argument("--open-loop-only", action="store_true",
+                    help="skip the closed-loop fused-vs-sequential section "
+                         "(CI smoke)")
+    ap.add_argument("--no-open-loop", action="store_true")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    for r in run(args.iters):
+    for r in run(args.iters, open_loop_n=args.open_loop_n,
+                 closed_loop=not args.open_loop_only,
+                 open_loop=not args.no_open_loop):
         print(r, flush=True)
 
 

@@ -23,6 +23,16 @@ their frontier vertex each step:
 
     PYTHONPATH=src python examples/serve_batch.py --sharded
 
+With ``--stream`` the service runs always-on instead of submit-then-drain:
+a :class:`repro.serve.StreamingSamplingService` scheduler thread forms
+cohorts continuously while an open-loop Poisson load generator submits
+mixed-spec requests across three priority tiers (interactive requests
+carry 50 ms deadlines, bulk 500 ms, standard ride the batching window).
+Prints per-tier p50/p99 latency, sustained requests/s, and the launch
+triggers that fired (DESIGN.md §15):
+
+    PYTHONPATH=src python examples/serve_batch.py --stream --rate 80
+
 ``--lm`` keeps the original language-model serving demo (prefill + decode
 with the KV/state cache on a smoke-scale arch):
 
@@ -105,6 +115,86 @@ def run_sampling_service(args) -> None:
     print(f"padding overhead: {s.padded_walker_slots} ghost walker slots")
 
 
+def run_streaming_demo(args) -> None:
+    """Open-loop streaming demo: Poisson arrivals against the always-on
+    scheduler, mixed specs and priority tiers, per-tier latency report."""
+    import collections
+
+    from repro.core import algorithms as alg
+    from repro.graph import powerlaw_graph
+    from repro.serve import (
+        Priority,
+        SamplingService,
+        ServiceConfig,
+        StreamConfig,
+        StreamingSamplingService,
+    )
+    from repro.serve.stream import percentile
+
+    g = powerlaw_graph(20_000, exponent=2.1, seed=0, weighted=True)
+    print(f"graph: V={g.num_vertices} E={g.num_edges} maxdeg={g.max_degree()}")
+
+    depth, width, max_cohort = 8, 16, 16
+    svc = SamplingService(
+        g, backend=args.backend, config=ServiceConfig(
+            max_pending_requests=1 << 14, max_pending_walkers=1 << 20,
+            max_requests_per_launch=max_cohort,
+        ),
+    )
+    specs = [alg.deepwalk(), alg.weighted_random_walk()]
+    print("prewarming launch traces (so no live request pays the compile)...")
+    for spec in specs:
+        r = 1
+        while r <= max_cohort:
+            svc.prewarm(spec, depth=depth, width=width, requests=r)
+            r *= 2
+
+    tiers = {
+        Priority.INTERACTIVE: ("interactive", 50.0),
+        Priority.STANDARD: ("standard", None),
+        Priority.BULK: ("bulk", 500.0),
+    }
+    rng = np.random.default_rng(7)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+    print(f"mode: always-on streaming — {args.requests} Poisson arrivals at "
+          f"{args.rate:.0f} req/s, 10 ms batching window")
+
+    futs = []
+    with StreamingSamplingService(
+        svc, StreamConfig(max_batch_window_ms=10.0)
+    ) as stream:
+        t0 = time.perf_counter()
+        for i, at in enumerate(arrivals):
+            delay = t0 + at - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            tier = [Priority.INTERACTIVE, Priority.STANDARD, Priority.BULK,
+                    Priority.STANDARD][i % 4]
+            futs.append(stream.submit(
+                rng.integers(0, g.num_vertices, int(rng.integers(9, width + 1))),
+                depth=depth, spec=specs[i % 2],
+                deadline_ms=tiers[tier][1], priority=tier,
+            ))
+        for f in futs:
+            f.result(timeout=600)
+        elapsed = time.perf_counter() - t0
+
+    lats = [f.latency for f in futs]
+    print(f"\nserved {len(futs)} requests in {elapsed:.2f}s "
+          f"({len(futs) / elapsed:.0f} req/s sustained), "
+          f"{svc.stats.stream_launches} launches, "
+          f"{svc.stats.stream_deadline_misses} deadline misses")
+    reasons = collections.Counter(l.reason for l in lats)
+    print("launch triggers: " + ", ".join(f"{k}={v}" for k, v in reasons.most_common()))
+    print(f"{'tier':>12s} {'n':>4s} {'p50 ms':>8s} {'p99 ms':>8s}")
+    for tier, (name, deadline) in tiers.items():
+        tl = [l.total_ms for l in lats if l.tier == int(tier)]
+        if tl:
+            print(f"{name:>12s} {len(tl):4d} {percentile(tl, 50):8.1f} "
+                  f"{percentile(tl, 99):8.1f}"
+                  + (f"   (deadline {deadline:.0f} ms)" if deadline else ""))
+
+
 def run_lm_demo(args) -> None:
     """Original LM serving demo: prefill + decode with the KV/state cache."""
     from repro.configs import get_smoke_config
@@ -157,6 +247,11 @@ def main() -> None:
     ap.add_argument("--sharded", action="store_true",
                     help="serve over a device mesh via the owner-routed "
                          "frontier exchange (forces 8 host devices on CPU)")
+    ap.add_argument("--stream", action="store_true",
+                    help="run the always-on streaming demo: open-loop "
+                         "Poisson arrivals, priority tiers, per-tier p50/p99")
+    ap.add_argument("--rate", type=float, default=80.0,
+                    help="streaming demo offered load, requests/s")
     ap.add_argument("--lm", action="store_true",
                     help="run the language-model serving demo instead")
     ap.add_argument("--arch", default="gemma3-1b")
@@ -167,6 +262,8 @@ def main() -> None:
 
     if args.lm:
         run_lm_demo(args)
+    elif args.stream:
+        run_streaming_demo(args)
     else:
         run_sampling_service(args)
 

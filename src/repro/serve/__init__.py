@@ -2,9 +2,14 @@
 
 Front door for serving many concurrent, heterogeneous sampling requests:
 admission-controlled queueing, padding-bucket batching keyed on lowered
-transition programs, fused device launches, per-request results.  See
+transition programs, fused device launches, per-request results.  Two
+serving modes share the cohort machinery: the batch
+:class:`SamplingService` (submit-then-drain) and the always-on
+:class:`StreamingSamplingService` (continuous batching under latency
+SLOs, priority tiers, per-tenant quotas — DESIGN.md §15).  See
 ``docs/api.md`` for the public surface and ``benchmarks/bench_serve.py``
-for the fused-vs-sequential throughput this layer buys.
+for the fused-vs-sequential and open-loop latency numbers this layer
+buys.
 """
 from repro.serve.queue import (
     AdmissionError,
@@ -16,20 +21,34 @@ from repro.serve.queue import (
 )
 from repro.serve.service import (
     DrainError,
+    RequestLatency,
     RequestResult,
     SamplingService,
     ServiceStats,
+)
+from repro.serve.stream import (
+    Priority,
+    StreamConfig,
+    StreamFuture,
+    StreamingSamplingService,
+    TenantQuota,
 )
 
 __all__ = [
     "AdmissionError",
     "DrainError",
     "Cohort",
+    "Priority",
+    "RequestLatency",
     "RequestQueue",
     "RequestResult",
     "SamplingRequest",
     "SamplingService",
     "ServiceConfig",
     "ServiceStats",
+    "StreamConfig",
+    "StreamFuture",
+    "StreamingSamplingService",
+    "TenantQuota",
     "cohort_key",
 ]

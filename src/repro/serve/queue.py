@@ -31,7 +31,14 @@ from repro.core import transition as tp
 
 
 class AdmissionError(RuntimeError):
-    """A request the queue refuses: malformed, oversized, or over capacity."""
+    """A request the queue refuses: malformed, oversized, or over capacity.
+
+    Every limit-violation message names the violated limit and its
+    configured value (``max_depth=512``, ``tenant_quota[t].walkers_per_s=...``)
+    so callers — and the operators reading service logs — can tell back-
+    pressure (drain/retry) from misconfiguration (resize the limit) without
+    string-guessing.
+    """
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +120,52 @@ class Cohort:
         return sum(r.num_walkers for r in self.requests)
 
 
+def validate_request(request: SamplingRequest, config: ServiceConfig) -> None:
+    """Per-request admission checks (shape + size ceilings) or raise
+    :class:`AdmissionError`.
+
+    Shared by the batch queue and the streaming front door
+    (``serve.stream``) so both admit exactly the same request population —
+    a request the batch service would serve is never shed by the stream and
+    vice versa.
+    """
+    n = request.num_walkers
+    if request.seeds.ndim != 1 or n == 0:
+        raise AdmissionError(
+            f"request {request.request_id}: seeds must be a non-empty "
+            f"1-D array, got shape {request.seeds.shape}"
+        )
+    if n > config.max_walkers_per_request:
+        raise AdmissionError(
+            f"request {request.request_id}: {n} walkers > "
+            f"max_walkers_per_request={config.max_walkers_per_request}"
+        )
+    if not 1 <= request.depth <= config.max_depth:
+        raise AdmissionError(
+            f"request {request.request_id}: depth {request.depth} outside "
+            f"[1, max_depth={config.max_depth}]"
+        )
+
+
+def check_capacity(
+    pending_requests: int, pending_walkers: int, incoming_walkers: int,
+    config: ServiceConfig,
+) -> None:
+    """Back-pressure ceilings over a pending population, or raise
+    :class:`AdmissionError` (callers should drain/await and retry, or shed
+    load).  Shared by the batch queue and the streaming backlog."""
+    if pending_requests >= config.max_pending_requests:
+        raise AdmissionError(
+            f"queue full: {pending_requests} pending requests "
+            f"(max_pending_requests={config.max_pending_requests}); drain first"
+        )
+    if pending_walkers + incoming_walkers > config.max_pending_walkers:
+        raise AdmissionError(
+            f"queue full: {pending_walkers}+{incoming_walkers} walkers > "
+            f"max_pending_walkers={config.max_pending_walkers}; drain first"
+        )
+
+
 class RequestQueue:
     """Admission control + cohort formation over pending requests."""
 
@@ -135,35 +188,13 @@ class RequestQueue:
         ceilings are the service's back-pressure signal (callers should
         ``drain()`` and retry, or shed load).
         """
-        cfg = self.config
-        n = request.num_walkers
-        if request.seeds.ndim != 1 or n == 0:
-            raise AdmissionError(
-                f"request {request.request_id}: seeds must be a non-empty "
-                f"1-D array, got shape {request.seeds.shape}"
-            )
-        if n > cfg.max_walkers_per_request:
-            raise AdmissionError(
-                f"request {request.request_id}: {n} walkers > "
-                f"max_walkers_per_request={cfg.max_walkers_per_request}"
-            )
-        if not 1 <= request.depth <= cfg.max_depth:
-            raise AdmissionError(
-                f"request {request.request_id}: depth {request.depth} outside "
-                f"[1, max_depth={cfg.max_depth}]"
-            )
-        if len(self._pending) >= cfg.max_pending_requests:
-            raise AdmissionError(
-                f"queue full: {len(self._pending)} pending requests "
-                f"(max_pending_requests={cfg.max_pending_requests}); drain first"
-            )
-        if self._pending_walkers + n > cfg.max_pending_walkers:
-            raise AdmissionError(
-                f"queue full: {self._pending_walkers}+{n} walkers > "
-                f"max_pending_walkers={cfg.max_pending_walkers}; drain first"
-            )
+        validate_request(request, self.config)
+        check_capacity(
+            len(self._pending), self._pending_walkers,
+            request.num_walkers, self.config,
+        )
         self._pending.append(request)
-        self._pending_walkers += n
+        self._pending_walkers += request.num_walkers
 
     def take_cohorts(self, bucket_by_shape: bool = True) -> List[Cohort]:
         """Group and remove all pending requests into padded cohorts.
@@ -177,6 +208,17 @@ class RequestQueue:
         program keys the grouping — the §V-C ideal of one merged queue pass
         per algorithm.  Each group splits into cohorts of at most
         ``max_requests_per_launch`` members.
+
+        **Ordering contract** (deterministic, FIFO-fair — the streaming
+        scheduler and the OOM/sharded launch-key discipline both depend on
+        it): within a cohort key, members appear in submission order (the
+        queue appends on ``submit`` and never reorders), so a request's row
+        in the packed launch — and hence its flat instance index on the
+        OOM/sharded paths — is fixed by the submission history alone.
+        Across keys, cohorts are returned in order of each group's
+        *earliest* member submission, and a group's cohorts (when it splits
+        at ``max_requests_per_launch``) stay in member order.  Two queues
+        fed the same submission sequence produce identical cohort lists.
         """
         cfg = self.config
         groups: Dict[tuple, List[SamplingRequest]] = {}

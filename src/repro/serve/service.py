@@ -83,6 +83,24 @@ class RequestResult(NamedTuple):
     sampled_edges: int  # total edges this request sampled
 
 
+class RequestLatency(NamedTuple):
+    """One streamed request's life-cycle timing (``serve.stream``).
+
+    ``queue_ms`` is submission → launch start (the batching-window cost),
+    ``launch_ms`` the request's cohort launch wall time, ``total_ms``
+    submission → result delivery.  ``deadline_met`` is ``None`` for
+    requests submitted without a deadline.
+    """
+
+    request_id: int
+    tier: int  # Priority value (lower = more urgent)
+    queue_ms: float
+    launch_ms: float
+    total_ms: float
+    reason: str  # what launched the cohort: fill / slack / window / flush / immediate
+    deadline_met: Optional[bool]
+
+
 @dataclasses.dataclass
 class ServiceStats:
     """Serving counters since construction (the benchmark's raw material)."""
@@ -94,6 +112,17 @@ class ServiceStats:
     sharded_launches: int = 0  # device-mesh frontier-exchange drains
     padded_walker_slots: int = 0  # launched slots minus real walkers
     plans_prewarmed: int = 0  # explicit prewarm() selection-plan builds
+    #: placements prewarm() has warmed (plan and/or compiled launch trace)
+    prewarmed_placements: tuple = ()
+    # --- streaming (serve.stream) ---------------------------------------
+    stream_requests: int = 0  # admitted through StreamingSamplingService
+    stream_launches: int = 0  # cohort launches the scheduling loop issued
+    stream_failed_requests: int = 0  # futures completed with an error
+    stream_deadline_misses: int = 0  # deadline'd requests delivered late
+    stream_quota_rejections: int = 0  # tenant token-bucket AdmissionErrors
+    #: per-request queue/launch/total latency (RequestLatency entries, in
+    #: delivery order) — the open-loop benchmark's raw material
+    stream_latencies: list = dataclasses.field(default_factory=list)
 
 
 def _slice_result(req: SamplingRequest, walks: np.ndarray) -> RequestResult:
@@ -231,16 +260,30 @@ class SamplingService:
         over-capacity requests — admission happens HERE, not at drain time,
         so callers get back-pressure while they can still shed load.
         """
+        req = self._make_request(seeds, depth=depth, spec=spec, key=key)
+        self._queue.submit(req)  # may raise — then the id is NOT consumed
+        self._next_id += 1
+        return req.request_id
+
+    def _make_request(
+        self, seeds, *, depth: int, spec: SamplingSpec,
+        key: Optional[jax.Array] = None,
+    ) -> SamplingRequest:
+        """Validate seeds and build the next :class:`SamplingRequest` —
+        shared by batch ``submit`` and the streaming front door
+        (``serve.stream``), so both allocate ids and per-request keys from
+        the same sequence.  Does NOT consume the id: callers bump
+        ``_next_id`` only after their own admission checks pass."""
         seeds = np.asarray(seeds)
         if seeds.ndim == 1 and seeds.size and (
             seeds.min() < 0 or seeds.max() >= self.num_vertices
         ):
             raise AdmissionError(
-                f"seeds outside [0, {self.num_vertices}): "
+                f"seeds outside [0, num_vertices={self.num_vertices}): "
                 f"min={seeds.min()} max={seeds.max()}"
             )
         rid = self._next_id
-        req = SamplingRequest(
+        return SamplingRequest(
             request_id=rid,
             # always copy: the queue holds the array past this call, and a
             # caller mutating its buffer would bypass the range check above
@@ -249,29 +292,97 @@ class SamplingService:
             spec=spec,
             key=key if key is not None else jax.random.fold_in(self._key, rid),
         )
-        self._queue.submit(req)  # may raise — then rid is NOT consumed
-        self._next_id += 1
-        return rid
 
-    def prewarm(self, spec: SamplingSpec) -> tuple:
-        """Plan ``spec``'s adaptive selection methods on this service's graph
-        and prebuild the alias/rejection tables NOW (DESIGN.md §13), so the
-        first request carrying the spec pays no build latency.
+    def prewarm(
+        self,
+        spec: SamplingSpec,
+        *,
+        depth: Optional[int] = None,
+        width: Optional[int] = None,
+        requests: int = 1,
+    ) -> tuple:
+        """Warm ``spec``'s serving path NOW, so no live request pays it.
 
-        The plan and its tables live in the per-(graph, bias fn) cache of
-        ``core.methods``; the service keeps the graph alive, so every
-        subsequent request with the same spec — across drains, fused or
-        sequential, in-memory or mesh-sharded — reuses the prebuilt tables.
-        Returns the per-cohort method plan (empty when there is nothing to
-        prebuild: non-flat specs, and OOM placement, whose partition-local
-        tables are built lazily on first launch).
+        Two independent layers, covering every placement:
+
+        1. **Selection plan** (memory and sharded placements, flat-bias
+           specs): build the adaptive method plan and its alias/rejection
+           tables (DESIGN.md §13).  They live in the per-(graph, bias fn)
+           cache of ``core.methods`` — the sharded drain reuses the
+           full-graph plan, so one build serves both placements.  OOM
+           tables are partition-local and built at first residency inside
+           the drain; the compile warm below triggers exactly that.
+        2. **Launch trace** (all placements): when ``depth`` is given, run
+           one throwaway launch at the padded geometry a request of
+           ``(width, depth)`` would occupy — ``width`` defaults to the
+           smallest walker bucket; ``requests`` sizes the fused request
+           axis on the memory placement — through the placement's real
+           engine entry point, so the jit trace (and, for OOM, the lazy
+           partition tables) exist before traffic arrives.  Without it, a
+           first streaming request on the partitioned or sharded paths
+           eats a multi-second compile inside its latency budget.
+
+        The warm launch uses a fixed throwaway key and does not advance
+        the service's request-id or launch-key sequences, so prewarming
+        never changes what any subsequent request samples.  Returns the
+        per-cohort method plan (empty when there is nothing to plan).
         """
         program = tp.lower(spec)
-        if self.placement == "oom" or program.mode != "flat":
-            return ()
-        methods, _tables = flat_method_plan(self.graph, program, self.max_degree)
-        self.stats.plans_prewarmed += 1
+        methods: tuple = ()
+        if self.placement != "oom" and program.mode == "flat":
+            methods, _tables = flat_method_plan(self.graph, program, self.max_degree)
+            self.stats.plans_prewarmed += 1
+        if depth is not None:
+            self._prewarm_launch(spec, depth=depth, width=width, requests=requests)
+        if self.placement not in self.stats.prewarmed_placements:
+            self.stats.prewarmed_placements += (self.placement,)
         return methods
+
+    def _prewarm_launch(
+        self, spec: SamplingSpec, *, depth: int, width: Optional[int],
+        requests: int,
+    ) -> None:
+        """One throwaway launch at the bucketed geometry, placement-routed.
+
+        Seeds are vertex 0 plus ``-1`` padding (an all-padding launch would
+        terminate before the OOM/sharded drain bodies ever compile); the
+        key is a constant, and no service stats/counters move, so the warm
+        launch is invisible to serving semantics and benchmarks alike.
+        """
+        cfg = self.config
+        depth_b = _pow2_bucket(int(depth), cfg.min_depth_bucket)
+        width_b = _pow2_bucket(int(width or 1), cfg.min_walker_bucket)
+        key = jax.random.PRNGKey(0)
+        if self.placement == "memory":
+            r_pad = _pow2_bucket(max(int(requests), 1), 1)
+            seeds = np.full((r_pad, width_b), -1, np.int32)
+            seeds[:, 0] = 0
+            keys = jnp.stack([key] * r_pad)
+            random_walk_segments(
+                self.graph, jnp.asarray(seeds), keys, depth=depth_b,
+                spec=spec, max_degree=self.max_degree, method=self.method,
+                backend=self.backend,
+            ).walks.block_until_ready()
+            return
+        # OOM / sharded: cohorts pack one flat instance axis (128-multiple,
+        # mirroring _pack_flat) with per-instance depth limits
+        i_pad = _pow2_bucket(width_b * max(int(requests), 1), 128)
+        seeds = np.full((i_pad,), -1, np.int32)
+        seeds[0] = 0
+        limits = np.zeros((i_pad,), np.int32)
+        limits[0] = depth_b
+        if self.placement == "oom":
+            oom_random_walk(
+                self.partitions, self.num_vertices, seeds, key,
+                depth=depth_b, spec=spec, max_degree=self.max_degree,
+                backend=self.backend, depth_limits=limits, **self._oom_kwargs,
+            )
+        else:
+            jax.block_until_ready(sharded_random_walk(
+                self.mesh, self.graph, seeds, key, depth=depth_b, spec=spec,
+                max_degree=self.max_degree, axis=self.shard_axis,
+                backend=self.backend, depth_limits=limits,
+            ).walks)
 
     # -- serving -----------------------------------------------------------
 
@@ -287,14 +398,7 @@ class SamplingService:
         cohorts = self._queue.take_cohorts(bucket_by_shape=self.placement == "memory")
         for i, cohort in enumerate(cohorts):
             try:
-                if self.placement == "oom":
-                    self._run_oom(cohort, out)
-                elif self.placement == "sharded":
-                    self._run_sharded(cohort, out)
-                elif self.config.fuse:
-                    self._run_fused(cohort, out)
-                else:
-                    self._run_sequential(cohort, out)
+                self._run_cohort(cohort, out)
             except Exception as e:
                 # _run_sequential may have partially filled `out` for this
                 # cohort; don't serve those twice on retry
@@ -308,9 +412,23 @@ class SamplingService:
                     f"results on .completed",
                     out,
                 ) from e
-            self.stats.requests_served += len(cohort.requests)
-            self.stats.walkers_served += cohort.num_walkers
         return out
+
+    def _run_cohort(self, cohort: Cohort, out: Dict[int, RequestResult]) -> None:
+        """Launch one cohort through this service's placement (the single
+        dispatch point ``drain()`` and the streaming scheduler share) and
+        account it.  On failure, ``out`` holds whatever the launch delivered
+        before raising (only the sequential path delivers partially)."""
+        if self.placement == "oom":
+            self._run_oom(cohort, out)
+        elif self.placement == "sharded":
+            self._run_sharded(cohort, out)
+        elif self.config.fuse:
+            self._run_fused(cohort, out)
+        else:
+            self._run_sequential(cohort, out)
+        self.stats.requests_served += len(cohort.requests)
+        self.stats.walkers_served += cohort.num_walkers
 
     def _pack(self, cohort: Cohort) -> tuple:
         """Pad cohort members into the launch geometry: ``(R_pad, W)`` seeds

@@ -195,6 +195,52 @@ REGRESSION_CASES = [
 ]
 
 
+class StreamCase(NamedTuple):
+    """One streaming-arrival parity check: a :class:`ParityCase` whose seed
+    set is cut into several requests and fed to the streaming scheduler in
+    a randomized arrival pattern (order, inter-arrival gaps, deadlines,
+    priorities all derived from ``arrival_seed``).  The contract: no
+    arrival pattern may change any request's walks — streaming decides
+    only *when* cohorts launch, never what they compute.
+    """
+
+    case: ParityCase
+    arrival_seed: int
+
+    @property
+    def label(self) -> str:
+        return f"{self.case.label}-arrival{self.arrival_seed}"
+
+
+def stream_requests(case: ParityCase, arrival_seed: int, num_requests: int = 3):
+    """Cut a case's seed set into per-request submissions plus an arrival
+    plan: ``(requests, order)`` where ``requests[i] = (seeds_i, depth_i)``
+    and ``order`` is the submission permutation.  Depths vary around the
+    case depth so the cut exercises mixed depth buckets; geometry stays on
+    the small fixed menus (shared jit caches, as everywhere else here).
+    """
+    g, seeds, spec, md = case_args(case)
+    rng = np.random.default_rng(arrival_seed)
+    cuts = [c for c in np.array_split(seeds, num_requests) if len(c)]
+    requests = [
+        (cut, max(1, case.depth - (i % 2))) for i, cut in enumerate(cuts)
+    ]
+    order = rng.permutation(len(requests))
+    return g, spec, md, requests, order, rng
+
+
+#: always-run streaming corpus: every arrival pattern over a program mix
+#: (flat / window / epilogue) — kept small, the hypothesis pass sweeps wider
+STREAM_CORPUS = [
+    StreamCase(SEED_CORPUS[0], 0),   # deepwalk, in-order-ish
+    StreamCase(SEED_CORPUS[0], 3),   # deepwalk, different arrival pattern
+    StreamCase(SEED_CORPUS[4], 1),   # node2vec (window bias, carried prev)
+    StreamCase(SEED_CORPUS[5], 2),   # MH epilogue
+    StreamCase(SEED_CORPUS[7], 1),   # restart teleport
+    StreamCase(SEED_CORPUS[1], 2),   # weighted + alias override
+]
+
+
 # ---------------------------------------------------------------------------
 # Hypothesis strategies (present only when hypothesis is installed)
 # ---------------------------------------------------------------------------

@@ -8,6 +8,10 @@ walk distribution — and for the deterministic pairs, the same *bits*:
   non-opaque program (owner routing + hub replication + counted RNG).
 - in-memory ↔ batched ``SamplingService``: bit-identical at the service's
   padded launch geometry (per-request keys).
+- in-memory ↔ streaming ``StreamingSamplingService``: bit-identical at the
+  same padded geometry, for EVERY arrival pattern — submission order,
+  inter-arrival gaps, deadlines, and priorities change only launch timing,
+  never any request's walks.
 - OOM drain: NOT bit-parity with in-memory (per-launch RNG keying and §V
   phantom-degree semantics are documented divergences) — its contracts are
   determinism across scheduling configurations, backend bit-parity, and
@@ -38,7 +42,12 @@ from repro.core.engine import random_walk
 from repro.core.oom import oom_random_walk
 from repro.core.transition import IdentityEpilogue, lower
 from repro.graph.partition import partition_by_vertex_range
-from repro.serve import SamplingService
+from repro.serve import (
+    Priority,
+    SamplingService,
+    StreamConfig,
+    StreamingSamplingService,
+)
 from repro.serve.queue import _pow2_bucket
 from repro.shard.walk import sharded_random_walk
 
@@ -46,8 +55,10 @@ from strategies import (
     HAS_HYPOTHESIS,
     REGRESSION_CASES,
     SEED_CORPUS,
+    STREAM_CORPUS,
     ParityCase,
     case_args,
+    stream_requests,
 )
 
 PARITY_EXAMPLES = int(os.environ.get("PARITY_EXAMPLES", "15"))
@@ -103,6 +114,60 @@ def check_service_parity(case: ParityCase):
                        max_degree=md, backend="reference")
     expect = np.asarray(solo.walks)[: len(seeds), : case.depth + 1]
     np.testing.assert_array_equal(res.walks, expect)
+
+
+def check_streaming_parity(case: ParityCase, arrival_seed: int,
+                           backend: str = "reference"):
+    """Streamed requests are bit-identical to standalone padded engine calls
+    under an arbitrary arrival pattern.
+
+    The case's seed set is cut into several requests with mixed depths, then
+    submitted in a randomized order with randomized inter-arrival gaps,
+    deadlines, and priorities (all derived from ``arrival_seed``), against a
+    deterministic fake clock polled between submissions — so cohorts really
+    do form and launch differently per pattern.  Every request must still
+    equal its own standalone ``random_walk`` at the padded geometry: the
+    scheduler controls timing, never bits.
+    """
+    g, spec, md, requests, order, rng = stream_requests(case, arrival_seed)
+    base = jax.random.PRNGKey(case.key_seed)
+    t = [0.0]
+    svc = SamplingService(g, backend=backend, key=jax.random.PRNGKey(99))
+    stream = StreamingSamplingService(
+        svc, StreamConfig(max_batch_window_ms=10.0, launch_cost_prior_ms=2.0),
+        clock=lambda: t[0], start=False,
+    )
+    futs = {}
+    tiers = list(Priority)
+    for j in order:
+        cut, depth = requests[j]
+        deadline = None if rng.random() < 0.5 else float(rng.uniform(1.0, 50.0))
+        futs[j] = stream.submit(
+            cut, depth=depth, spec=spec,
+            key=jax.random.fold_in(base, j),
+            deadline_ms=deadline,
+            priority=tiers[int(rng.integers(len(tiers)))],
+        )
+        t[0] += float(rng.uniform(0.0, 0.006))
+        stream.poll()  # launches interleave with arrivals per the policy
+    t[0] += 1.0
+    stream.poll()
+    assert stream.pending == 0
+    cfg = svc.config
+    for j, (cut, depth) in enumerate(requests):
+        width = _pow2_bucket(len(cut), cfg.min_walker_bucket)
+        depth_b = _pow2_bucket(depth, cfg.min_depth_bucket)
+        row = np.full((width,), -1, np.int32)
+        row[: len(cut)] = cut
+        solo = random_walk(
+            g, jnp.asarray(row), jax.random.fold_in(base, j), depth=depth_b,
+            spec=spec, max_degree=md, backend=backend,
+        )
+        expect = np.asarray(solo.walks)[: len(cut), : depth + 1]
+        np.testing.assert_array_equal(
+            futs[j].result(timeout=0).walks, expect,
+            err_msg=f"request {j} (arrival_seed={arrival_seed})",
+        )
 
 
 def check_oom_properties(case: ParityCase, num_partitions=4):
@@ -204,6 +269,20 @@ def test_corpus_service_parity(case):
 
 
 @pytest.mark.parametrize(
+    "sc", STREAM_CORPUS, ids=[sc.label for sc in STREAM_CORPUS]
+)
+def test_corpus_streaming_parity(sc):
+    check_streaming_parity(sc.case, sc.arrival_seed)
+
+
+@pytest.mark.parametrize(
+    "sc", STREAM_CORPUS[:2], ids=[sc.label for sc in STREAM_CORPUS[:2]]
+)
+def test_corpus_streaming_parity_pallas(sc):
+    check_streaming_parity(sc.case, sc.arrival_seed, backend="pallas")
+
+
+@pytest.mark.parametrize(
     "case",
     [c for c in SEED_CORPUS if c.spec in ("deepwalk", "node2vec", "mh")][:4],
     ids=lambda c: c.label,
@@ -218,6 +297,7 @@ def test_corpus_oom_properties(case):
 
 if HAS_HYPOTHESIS:
     from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
 
     from strategies import walk_cases
 
@@ -242,6 +322,13 @@ if HAS_HYPOTHESIS:
     @given(case=walk_cases())
     def test_prop_service_parity(case):
         check_service_parity(case)
+
+    @settings(max_examples=max(PARITY_EXAMPLES // 2, 5), deadline=None,
+              derandomize=True,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(case=walk_cases(), arrival_seed=st.integers(0, 7))
+    def test_prop_streaming_parity(case, arrival_seed):
+        check_streaming_parity(case, arrival_seed)
 
     @settings(max_examples=max(PARITY_EXAMPLES // 3, 3), deadline=None,
               derandomize=True,

@@ -151,6 +151,52 @@ class TestRequestQueue:
         (c,) = q.take_cohorts(bucket_by_shape=False)
         assert len(c.requests) == 2 and c.depth >= 11
 
+    def test_admission_errors_name_violated_limits(self):
+        """Every limit rejection names the limit and its configured value —
+        operators must be able to tell back-pressure from misconfiguration
+        without string-guessing."""
+        q = RequestQueue(ServiceConfig(
+            max_walkers_per_request=64, max_depth=16,
+            max_pending_requests=1, max_pending_walkers=10,
+        ))
+        with pytest.raises(AdmissionError, match="max_walkers_per_request=64"):
+            q.submit(_req(0, 65, 4, alg.deepwalk()))
+        with pytest.raises(AdmissionError, match="max_depth=16"):
+            q.submit(_req(1, 4, 17, alg.deepwalk()))
+        q.submit(_req(2, 4, 4, alg.deepwalk()))
+        with pytest.raises(AdmissionError, match="max_pending_requests=1"):
+            q.submit(_req(3, 4, 4, alg.deepwalk()))
+        qw = RequestQueue(ServiceConfig(max_pending_walkers=10))
+        qw.submit(_req(0, 8, 4, alg.deepwalk()))
+        with pytest.raises(AdmissionError, match="max_pending_walkers=10"):
+            qw.submit(_req(1, 8, 4, alg.deepwalk()))
+
+    def test_take_cohorts_ordering_contract(self):
+        """The documented FIFO-fair ordering: members in submission order
+        within a cohort, cohorts by earliest member submission across keys,
+        and the whole thing a pure function of the submission sequence."""
+        def feed(q):
+            q.submit(_req(0, 8, 4, alg.deepwalk()))
+            q.submit(_req(1, 8, 4, alg.weighted_random_walk()))
+            q.submit(_req(2, 8, 4, alg.deepwalk()))
+            q.submit(_req(3, 40, 4, alg.deepwalk()))  # width 64: own cohort
+            q.submit(_req(4, 8, 4, alg.weighted_random_walk()))
+            q.submit(_req(5, 8, 4, alg.deepwalk()))
+            return [[r.request_id for r in c.requests] for c in q.take_cohorts()]
+
+        got = feed(RequestQueue(ServiceConfig()))
+        # members in submission order; groups by earliest member submission
+        assert got == [[0, 2, 5], [1, 4], [3]]
+        # deterministic: an identically-fed queue produces the identical list
+        assert feed(RequestQueue(ServiceConfig())) == got
+
+    def test_take_cohorts_split_groups_stay_in_member_order(self):
+        q = RequestQueue(ServiceConfig(max_requests_per_launch=2))
+        for i in range(5):
+            q.submit(_req(i, 8, 4, alg.deepwalk()))
+        got = [[r.request_id for r in c.requests] for c in q.take_cohorts()]
+        assert got == [[0, 1], [2, 3], [4]]
+
 
 class TestFusedParity:
     @pytest.mark.parametrize("backend", ["reference", "pallas"])
@@ -308,6 +354,60 @@ class TestOOMService:
                 spec=alg.deepwalk(), max_degree=g.max_degree(),
                 backend="reference", depth_limits=np.full(8, 9),
             )
+
+
+class TestPrewarm:
+    """prewarm() across placements: warms plans and launch traces without
+    perturbing serving semantics (ids, keys, results, benchmark counters)."""
+
+    def _drain_one(self, svc, g, n=12, depth=6):
+        rid = svc.submit(np.arange(n) % g.num_vertices, depth=depth,
+                         spec=alg.deepwalk())
+        return svc.drain()[rid]
+
+    def test_memory_prewarm_records_placement_and_stays_invisible(self, graph):
+        g = graph
+        cold = SamplingService(g, backend="reference", key=jax.random.PRNGKey(4))
+        warm = SamplingService(g, backend="reference", key=jax.random.PRNGKey(4))
+        warm.prewarm(alg.deepwalk(), depth=6, width=12)
+        warm.prewarm(alg.deepwalk(), depth=6, width=12)  # idempotent
+        assert warm.stats.prewarmed_placements == ("memory",)
+        assert warm.stats.launches == 0  # ghost launches aren't counted
+        np.testing.assert_array_equal(
+            self._drain_one(warm, g).walks, self._drain_one(cold, g).walks
+        )
+
+    def test_partitioned_prewarm(self, graph):
+        g = graph
+        parts = partition_by_vertex_range(g, 4)
+        mk = lambda: SamplingService(
+            partitions=parts, total_vertices=g.num_vertices,
+            backend="reference", oom_chunk=128, key=jax.random.PRNGKey(4),
+        )
+        cold, warm = mk(), mk()
+        warm.prewarm(alg.deepwalk(), depth=6, width=12)
+        assert warm.stats.prewarmed_placements == ("oom",)
+        # no launch-key consumed: the first real drain samples identically
+        np.testing.assert_array_equal(
+            self._drain_one(warm, g).walks, self._drain_one(cold, g).walks
+        )
+        assert warm.stats.oom_launches == 1  # only the real drain counted
+
+    def test_sharded_prewarm(self, graph):
+        g = graph
+        mesh = jax.make_mesh((1,), ("data",))
+        mk = lambda: SamplingService(
+            g, mesh=mesh, placement="sharded", backend="reference",
+            key=jax.random.PRNGKey(4),
+        )
+        cold, warm = mk(), mk()
+        warm.prewarm(alg.deepwalk(), depth=6, width=12)
+        assert warm.stats.prewarmed_placements == ("sharded",)
+        assert warm.stats.plans_prewarmed == 1  # reuses the full-graph plan
+        np.testing.assert_array_equal(
+            self._drain_one(warm, g).walks, self._drain_one(cold, g).walks
+        )
+        assert warm.stats.sharded_launches == 1
 
 
 class TestRobustness:
